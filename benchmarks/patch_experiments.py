@@ -1,0 +1,81 @@
+"""Regenerate the EXPERIMENTS.md §Roofline table block from
+results/dryrun/*__pod__baseline.json (run after a sweep).
+
+Usage: PYTHONPATH=src python -m benchmarks.patch_experiments
+Replaces the markdown table between the BEGIN/END roofline markers.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+BASE = os.path.join(os.path.dirname(__file__), "..")
+
+LEVERS = {
+    ("falcon-mamba-7b", "prefill_32k"): "(B,S,d_i,N) scan terms -> Pallas scan kernel (kernels/selective_scan.py)",
+    ("falcon-mamba-7b", "train_4k"): "same + batch sharding",
+    ("falcon-mamba-7b", "long_500k"): "B=1 latency-bound; state is O(1)",
+    ("llama3.2-3b", "prefill_32k"): "24 heads vs TP16 -> SP (§Perf B)",
+    ("llama3.2-3b", "train_4k"): "**hillclimbed: §Perf B**",
+    ("moonshot-v1-16b-a3b", "train_4k"): "**hillclimbed: §Perf C**",
+    ("zamba2-1.2b", "train_4k"): "**hillclimbed: §Perf A**",
+    ("zamba2-1.2b", "prefill_32k"): "SSD algorithm (§Perf A)",
+    ("nemotron-4-340b", "train_4k"): "best baseline (compute-heavy at 340B)",
+    ("qwen2-vl-72b", "train_4k"): "best train baseline",
+}
+DEFAULT_LEVER = {
+    "memory": "activation constraints / layout",
+    "collective": "re-shard (constraints, shard_map dispatch)",
+    "compute": "remove replicated compute",
+}
+
+
+def build_table() -> str:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(
+            BASE, "results", "dryrun", "*__pod__baseline.json"))):
+        r = json.load(open(f))
+        if r["status"] != "ok":
+            continue
+        ro = r["roofline"]
+        lever = LEVERS.get((r["arch"], r["shape"]),
+                           DEFAULT_LEVER[ro["dominant"]])
+        dom = (f"**{ro['dominant']}**" if ro["dominant"] == "collective"
+               else ro["dominant"])
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.3f} | "
+            f"{ro['memory_s']:.3f} | {ro['collective_s']:.3f} | {dom} | "
+            f"{ro.get('useful_ratio', 0):.2f} | "
+            f"{ro.get('roofline_fraction', 0):.4f} | {lever} |")
+    head = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+            "| useful | roofline frac | what moves it |\n"
+            "|---|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def main():
+    path = os.path.join(BASE, "EXPERIMENTS.md")
+    s = open(path).read()
+    table = build_table()
+    block = ("<!-- BEGIN ROOFLINE TABLE (generated) -->\n"
+             + table + "\n<!-- END ROOFLINE TABLE -->")
+    if "BEGIN ROOFLINE TABLE" in s:
+        s = re.sub(r"<!-- BEGIN ROOFLINE TABLE.*?END ROOFLINE TABLE -->",
+                   block, s, flags=re.S)
+    else:
+        # replace the hand-written table (first |arch|shape| table block
+        # after the §Roofline header)
+        m = re.search(
+            r"(## §Roofline.*?)\n\| arch \| shape \|.*?\n\n",
+            s, flags=re.S)
+        if not m:
+            raise SystemExit("roofline table not found")
+        s = s[:m.end(1)] + "\n\n" + block + "\n\n" + s[m.end(0):]
+    open(path, "w").write(s)
+    print("EXPERIMENTS.md roofline table regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Emit the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
+results/dryrun/*.json.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [--mode baseline]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+BASE = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(mode: str):
+    out = {}
+    for f in glob.glob(os.path.join(BASE, f"*__{mode}.json")):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"], r["multi_pod"])] = r
+    return out
+
+
+def fmt_bytes(n):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def dryrun_table(rows, multi_pod: bool):
+    mesh = "(2,16,16)=512 chips" if multi_pod else "(16,16)=256 chips"
+    print(f"\n### Mesh {mesh}\n")
+    print("| arch | shape | status | compile_s | HBM/device (args+temp) | "
+          "collective mix |")
+    print("|---|---|---|---|---|---|")
+    for (arch, shape, mp), r in sorted(rows.items()):
+        if mp != multi_pod:
+            continue
+        if r["status"] == "skipped":
+            print(f"| {arch} | {shape} | SKIP (full-attn @500k, documented) "
+                  f"| — | — | — |")
+            continue
+        m = r["memory"]
+        hbm = fmt_bytes(m["argument_bytes_per_device"]
+                        + m["temp_bytes_per_device"])
+        mix = ", ".join(
+            f"{k}:{fmt_bytes(v)}" for k, v in sorted(
+                r["roofline"]["collective_per_kind"].items(),
+                key=lambda kv: -kv[1])[:3])
+        print(f"| {arch} | {shape} | ok | {r['compile_s']} | {hbm} | "
+              f"{mix} |")
+
+
+def roofline_table(rows):
+    print("\n| arch | shape | compute_s | memory_s | collective_s | dominant "
+          "| MODEL_FLOPS | useful ratio | roofline frac | next lever |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    levers = {
+        "memory": "cut materialized activation traffic (remat policy, "
+                  "fused scan, loss chunking)",
+        "collective": "re-shard to kill per-layer gathers (constraints, "
+                      "int8 pod sync)",
+        "compute": "remove redundant/replicated compute; raise "
+                   "arithmetic intensity",
+    }
+    for (arch, shape, mp), r in sorted(rows.items()):
+        if mp or r["status"] == "skipped":
+            continue
+        ro = r["roofline"]
+        print(f"| {arch} | {shape} | {ro['compute_s']:.3f} | "
+              f"{ro['memory_s']:.3f} | {ro['collective_s']:.3f} | "
+              f"**{ro['dominant']}** | {ro.get('model_flops_global', 0):.2e} | "
+              f"{ro.get('useful_ratio', 0):.3f} | "
+              f"{ro.get('roofline_fraction', 0):.4f} | "
+              f"{levers[ro['dominant']]} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="baseline")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline"])
+    args = ap.parse_args()
+    rows = load(args.mode)
+    if args.section in ("all", "dryrun"):
+        print(f"## §Dry-run ({args.mode})")
+        dryrun_table(rows, multi_pod=False)
+        dryrun_table(rows, multi_pod=True)
+    if args.section in ("all", "roofline"):
+        print(f"\n## §Roofline ({args.mode}, single-pod per spec)")
+        roofline_table(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""Benchmark harness — one function per paper table/figure + framework
+benches.  Prints ``name,us_per_call,derived`` CSV rows.
+
+Paper artifacts:
+  scenario_emissions   — Fig. 2 / §5: Baseline/A/B/C annual CO2 + reductions
+  ranking_throughput   — Eq. 1 at fleet scale (jnp vs Pallas-fused kernel)
+  forecast_skill       — FCFP forecaster vs persistence
+  projection           — §5 EU-taxonomy bullet list (units, trees, cars, €)
+
+Framework benches:
+  placement_scale      — greedy carbon-aware placement, 1e3..1e5 nodes
+  train_step_smoke     — reduced-arch train step wall time (CPU)
+  decode_step_smoke    — reduced-arch decode step wall time (CPU)
+  roofline_report      — aggregates results/dryrun/*.json (see §Roofline)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS = []
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def timeit(fn, *args, n=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# ---------------------------------------------------------------------------
+
+
+def bench_scenario_emissions():
+    from repro.core.scenarios import run_paper_experiment
+    t0 = time.perf_counter()
+    r = run_paper_experiment()
+    us = (time.perf_counter() - t0) * 1e6
+    for k in ("baseline", "A", "B", "C"):
+        row(f"scenario_{k}", us / 4,
+            f"kg={r.emissions_kg[k]:.1f};reduction={r.reduction_pct[k]:.2f}%")
+    row("scenario_C_vs_paper", us / 4,
+        f"got={r.reduction_pct['C']:.2f}%;paper=85.68%")
+
+
+def bench_ranking_throughput():
+    from repro.core.ranking import RankWeights, maiz_ranking
+    from repro.kernels.ops import maiz_ranking_fused
+    rng = np.random.default_rng(0)
+    w = RankWeights()
+    for n in (4096, 65536, 1_048_576):
+        ec = jnp.asarray(rng.random(n), jnp.float32)
+        pue = jnp.asarray(1 + rng.random(n), jnp.float32)
+        ci = jnp.asarray(rng.random(n) * 500, jnp.float32)
+        fc = jnp.asarray(rng.random(n) * 500, jnp.float32)
+        eff = jnp.asarray(rng.random(n), jnp.float32)
+        sw = jnp.asarray(rng.random(n), jnp.float32)
+
+        jnp_fn = jax.jit(lambda a, b, c, d, e, f: maiz_ranking(
+            a * b * c, a * b * d, e, f, w))
+        us = timeit(jnp_fn, ec, pue, ci, fc, eff, sw)
+        row(f"ranking_jnp_n{n}", us, f"nodes_per_s={n / us * 1e6:.3e}")
+        if n <= 65536:   # interpret-mode pallas is python-speed on CPU
+            kern = jax.jit(lambda a, b, c, d, e, f: maiz_ranking_fused(
+                a, b, c, d, e, f, w.as_array(), interpret=True)[0])
+            us_k = timeit(kern, ec, pue, ci, fc, eff, sw, n=3, warmup=1)
+            row(f"ranking_pallas_interp_n{n}", us_k,
+                "CPU-interpret; TPU target is compiled")
+
+
+def bench_forecast_skill():
+    from repro.core import forecast, telemetry
+    skills = []
+    t0 = time.perf_counter()
+    for region in ("ES", "NL", "DE"):
+        for t in (3000, 6000):
+            ci = telemetry.hourly_ci(telemetry.REGIONS[region], hours=t + 48)
+            skills.append(float(forecast.forecast_skill(
+                jnp.asarray(ci[:t]), jnp.asarray(ci[t:t + 48]))))
+    us = (time.perf_counter() - t0) * 1e6 / len(skills)
+    row("forecast_48h_skill", us,
+        f"mae_vs_persistence={np.mean(skills):.3f}(<1 beats)")
+
+
+def bench_projection():
+    from repro.core.cpp import eu_taxonomy_projection
+    t0 = time.perf_counter()
+    p = eu_taxonomy_projection()
+    us = (time.perf_counter() - t0) * 1e6
+    row("projection_units", us, f"units={p.units_required}(paper:27686054)")
+    row("projection_equiv", us,
+        f"trees={p.trees_equivalent / 1e6:.1f}M;cars="
+        f"{p.cars_equivalent / 1e6:.2f}M")
+    row("projection_ecocost", us,
+        ";".join(f"{k}={v / 1e9:.2f}B" for k, v in p.eco_costs_eur.items()))
+
+
+def bench_placement_scale():
+    from repro.core.fleet import synthetic_fleet
+    from repro.core.scheduler import place_jobs
+    for n in (1024, 16384, 131072):
+        fleet = synthetic_fleet(n, seed=1)
+        demands = jnp.asarray([64] * 16, jnp.int32)
+        fn = jax.jit(lambda f, d: place_jobs(f, d).node)
+        us = timeit(fn, fleet, demands, n=5, warmup=2)
+        row(f"placement_16jobs_n{n}", us, f"nodes={n}")
+
+
+def bench_train_step_smoke():
+    from repro.configs import ARCHS
+    from repro.models.model import ModelFlags, build_model
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.train_step import TrainState, make_train_step
+    from repro.data.pipeline import DataConfig, PipelineState, host_batch
+    for arch in ("granite-3-2b", "falcon-mamba-7b", "moonshot-v1-16b-a3b"):
+        cfg = ARCHS[arch].reduced()
+        model = build_model(cfg, ModelFlags(attn_chunk=32, ssm_chunk=16))
+        params = model.init(jax.random.key(0))
+        state = TrainState.create(params)
+        _, b = host_batch(DataConfig(cfg, 8, 64), PipelineState(0, 0))
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        step = jax.jit(make_train_step(model, AdamWConfig()))
+        state, _ = step(state, batch)   # compile
+        us = timeit(lambda s: step(s, batch)[0].params["ln_f"], state, n=5)
+        tok_s = 8 * 64 / us * 1e6
+        row(f"train_step_reduced_{arch}", us, f"tokens_per_s={tok_s:.0f}")
+
+
+def bench_decode_step_smoke():
+    from repro.configs import ARCHS
+    from repro.models.model import ModelFlags, build_model
+    for arch in ("granite-3-2b", "falcon-mamba-7b"):
+        cfg = ARCHS[arch].reduced()
+        model = build_model(cfg, ModelFlags(attn_chunk=32, ssm_chunk=16))
+        params = model.init(jax.random.key(0))
+        B = 8
+        toks = jnp.zeros((B, 16), jnp.int32)
+        _, caches = jax.jit(lambda p, b: model.prefill(p, b, 64))(
+            params, {"tokens": toks})
+        db = {"token": jnp.zeros((B,), jnp.int32),
+              "positions": jnp.full((B,), 16, jnp.int32)}
+        step = jax.jit(model.decode_step)
+        step(params, caches, db)
+        us = timeit(lambda c: step(params, c, db)[0], caches, n=10)
+        row(f"decode_step_reduced_{arch}", us,
+            f"tokens_per_s={B / us * 1e6:.0f}")
+
+
+def bench_roofline_report():
+    base = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+    files = glob.glob(os.path.join(base, "*__baseline.json"))
+    ok = skipped = 0
+    worst = (None, 1e9)
+    for f in files:
+        r = json.load(open(f))
+        if r["status"] == "skipped":
+            skipped += 1
+            continue
+        ok += 1
+        frac = r["roofline"].get("roofline_fraction", 0)
+        if frac < worst[1]:
+            worst = (f"{r['arch']}/{r['shape']}", frac)
+    row("dryrun_cells_ok", 0.0, f"ok={ok};skipped={skipped}")
+    if worst[0]:
+        row("dryrun_worst_fraction", 0.0, f"{worst[0]}={worst[1]:.5f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_scenario_emissions()
+    bench_projection()
+    bench_forecast_skill()
+    bench_ranking_throughput()
+    bench_placement_scale()
+    bench_train_step_smoke()
+    bench_decode_step_smoke()
+    bench_roofline_report()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+# The paper's primary contribution — the MAIZX carbon-aware orchestration
+# layer: Eq. 2 accounting (carbon), FCFP forecasting (forecast), Eq. 1
+# ranking (ranking), scenario policies + fleet placement (scheduler), the
+# paper's year-long 3-DC experiment (scenarios), CPP projection (cpp), and
+# the fleet state the training framework feeds (fleet).
+from repro.core.carbon import carbon_footprint, emissions_g, job_energy_kwh, cp_ratio  # noqa: F401
+from repro.core.forecast import fit_forecast, forecast_regions, forecast_skill  # noqa: F401
+from repro.core.ranking import RankWeights, maiz_ranking, rank_nodes  # noqa: F401
+from repro.core.fleet import Fleet, synthetic_fleet  # noqa: F401
+from repro.core.scheduler import SCENARIOS, place_jobs, Placement  # noqa: F401
+from repro.core.scenarios import run_paper_experiment, ScenarioResult  # noqa: F401
+from repro.core.cpp import eu_taxonomy_projection, cpp_score, Projection  # noqa: F401

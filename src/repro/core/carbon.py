@@ -1,0 +1,50 @@
+"""Carbon accounting — paper Eq. 2:  CF = EC × PUE × CI.
+
+Vectorized in JAX so fleet-scale accounting (N nodes × T hours) runs as one
+fused computation on-device; the same functions back the scenario simulator,
+the MAIZX ranking terms, and the training-framework energy estimates.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# TPU v5e hardware constants (used to map training jobs to energy)
+CHIP_PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+CHIP_POWER_W = 250.0                # ~typical board power under load
+HOST_POWER_W = 450.0                # amortized host per 8 chips
+
+
+def carbon_footprint(energy_kwh: jax.Array, pue: jax.Array,
+                     ci_g_per_kwh: jax.Array) -> jax.Array:
+    """Eq. 2 — gCO2eq.  Broadcasts over any leading shape."""
+    return energy_kwh * pue * ci_g_per_kwh
+
+
+def emissions_g(power_w: jax.Array, pue: jax.Array, ci: jax.Array,
+                dt_hours: float = 1.0) -> jax.Array:
+    """Integrate a power timeseries (..., T) against CI (..., T) -> gCO2eq."""
+    energy_kwh = power_w * dt_hours / 1000.0
+    return jnp.sum(carbon_footprint(energy_kwh, pue, ci), axis=-1)
+
+
+def job_energy_kwh(step_time_s: jax.Array, steps: jax.Array,
+                   chips: int, *, chip_power_w: float = CHIP_POWER_W,
+                   host_power_w: float = HOST_POWER_W) -> jax.Array:
+    """Energy for a training/serving job: wall time × (chips + hosts).
+
+    ``step_time_s`` comes from the roofline model (max of the three terms) —
+    this is how the dry-run cost analysis feeds MAIZX's CFP/FCFP terms for
+    placement of the assigned (arch × shape) workloads."""
+    wall_s = step_time_s * steps
+    watts = chips * chip_power_w + (chips / 8.0) * host_power_w
+    return wall_s / 3600.0 * watts / 1000.0
+
+
+def cp_ratio(useful_flops: jax.Array, energy_kwh: jax.Array) -> jax.Array:
+    """Computing-Power ratio (Eq. 1's CP_RATIO): useful FLOPs per joule.
+    Higher is better; the ranking normalizes and inverts it."""
+    joules = energy_kwh * 3.6e6
+    return useful_flops / jnp.maximum(joules, 1e-9)

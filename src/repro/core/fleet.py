@@ -1,0 +1,73 @@
+"""Fleet state: pods/nodes with capacity, health and region telemetry.
+
+This is the substrate MAIZX ranks.  A ``Fleet`` is a struct-of-arrays over N
+nodes (a node = one schedulable pod / data-center partition, scaling to
+thousands); all fields are jnp arrays so ranking + placement jit/vmap over
+the whole fleet.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import telemetry
+from repro.core.ranking import RankWeights, maiz_ranking
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Fleet:
+    """Struct-of-arrays fleet; N = number of schedulable nodes."""
+    ci_now: jax.Array          # (N,) gCO2/kWh current carbon intensity
+    ci_forecast: jax.Array     # (N,) mean forecast over the decision horizon
+    pue: jax.Array             # (N,)
+    power_kw: jax.Array        # (N,) expected IT power if the job runs here
+    capacity: jax.Array        # (N,) free chip count
+    healthy: jax.Array         # (N,) bool
+    straggler_score: jax.Array  # (N,) >=0, EWMA of relative step slowness
+    flops_per_j: jax.Array     # (N,) chip efficiency (CP_RATIO numerator)
+
+    @property
+    def n(self) -> int:
+        return self.ci_now.shape[0]
+
+    def rank(self, *, horizon_h: float = 1.0,
+             weights: RankWeights = RankWeights(),
+             demand_chips: Optional[jax.Array] = None) -> jax.Array:
+        """Eq. 1 scores for placing a job of ``demand_chips`` chips."""
+        energy_kwh = self.power_kw * horizon_h
+        cfp = energy_kwh * self.pue * self.ci_now
+        fcfp = energy_kwh * self.pue * self.ci_forecast
+        sched = self.straggler_score + jnp.where(self.healthy, 0.0, 1e3)
+        scores = maiz_ranking(cfp, fcfp, self.flops_per_j, sched, weights)
+        if demand_chips is not None:
+            scores = jnp.where(self.capacity >= demand_chips, scores, jnp.inf)
+        return scores
+
+
+def synthetic_fleet(n: int, seed: int = 0, chips_per_node: int = 256,
+                    hour: int = 0) -> Fleet:
+    """Deterministic synthetic fleet spanning the paper's three regions."""
+    rng = np.random.default_rng(seed)
+    regions = list(telemetry.REGIONS.values())
+    ridx = rng.integers(0, len(regions), n)
+    ci = np.stack([telemetry.hourly_ci(regions[i], hours=hour + 25,
+                                       seed=seed + i) for i in ridx])
+    return Fleet(
+        ci_now=jnp.asarray(ci[:, hour], jnp.float32),
+        ci_forecast=jnp.asarray(ci[:, hour:hour + 24].mean(-1), jnp.float32),
+        pue=jnp.asarray([regions[i].pue for i in ridx], jnp.float32),
+        power_kw=jnp.asarray(
+            chips_per_node * 0.25 * (1 + 0.1 * rng.random(n)), jnp.float32),
+        capacity=jnp.asarray(
+            rng.integers(0, chips_per_node + 1, n), jnp.int32),
+        healthy=jnp.asarray(rng.random(n) > 0.02),
+        straggler_score=jnp.asarray(
+            np.abs(rng.normal(0, 0.05, n)), jnp.float32),
+        flops_per_j=jnp.asarray(
+            788e9 * (1 + 0.05 * rng.standard_normal(n)), jnp.float32),
+    )

@@ -1,0 +1,5 @@
+from repro.distributed.sharding import (  # noqa: F401
+    Param, Rules, DEFAULT_RULES, resolve_spec, tree_specs, tree_shardings,
+    tree_sds, init_tree, logical_constraint, constrain, constrain_pref,
+    activation_sharding,
+)

@@ -1,0 +1,278 @@
+"""Logical-axis sharding rules with divisibility-checked fallback.
+
+Every parameter / activation dimension carries a *logical* axis name
+("fsdp", "tp", "batch", ...).  ``resolve_spec`` maps logical names to mesh
+axes using prioritized candidate lists, skipping candidates that (a) collide
+with mesh axes already used by another dim of the same tensor or (b) do not
+divide the dimension evenly.  This is what lets one model definition serve a
+(16,16) pod, a (2,16,16) multi-pod mesh, and the 1-device CPU smoke mesh
+without per-arch hand-editing (e.g. granite's vocab=49155 silently falls back
+from tp to replicated, and the embedding shards d_model instead).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Parameter template node
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """Declarative parameter: shape + logical axes + init recipe."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "fan_in"        # fan_in | normal | zeros | ones | embed | small
+    scale: float = 1.0
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def stack(self, n: int) -> "Param":
+        """Add a leading (unsharded) layer-stack dimension."""
+        return dataclasses.replace(
+            self, shape=(n, *self.shape), axes=(None, *self.axes))
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+# logical axis -> candidate mesh-axis tuples, first fit wins.
+# () means "replicate" and always fits.
+DEFAULT_RULES: Dict[str, Tuple[Tuple[str, ...], ...]] = {
+    # data-parallel / fsdp family.  NOTE: "fsdp" deliberately excludes the
+    # "pod" axis — params/optimizer shard 256-way *within* a pod (ICI) and
+    # replicate across pods, so the only cross-pod (DCN) traffic is the
+    # per-step gradient all-reduce, which the int8 compression path shrinks.
+    "batch":   (("pod", "data"), ("data",), ()),
+    "fsdp":    (("data",), ()),
+    # tensor-parallel family
+    "tp":      (("model",), ()),
+    "vocab":   (("model",), ("data",), ()),   # embedding rows
+    "experts": (("model",), ()),
+    # activations
+    "seq":     ((),),                          # train-time sequence (replicated)
+    "sp_seq":  (("model",), ()),               # sequence-parallel residual stream
+    "kv_seq":  (("model",), ("data",), ()),    # decode KV-cache sequence dim
+    "kv_heads": (("model",), ()),
+    "heads":   (("model",), ()),
+    "d_model": ((),),
+    "ssm_inner": (("model",), ()),
+    "state":   ((),),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    table: Dict[str, Tuple[Tuple[str, ...], ...]] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES))
+
+    def with_overrides(self, **kw) -> "Rules":
+        t = dict(self.table)
+        t.update(kw)
+        return Rules(t)
+
+    def candidates(self, name: str):
+        if name is None:
+            return ((),)
+        cands = self.table.get(name, ((),))
+        # Always allow full replication as terminal fallback.
+        return tuple(cands) + ((),) if () not in cands else tuple(cands)
+
+
+def _mesh_axis_sizes(mesh) -> Dict[str, int]:
+    # works for both Mesh and AbstractMesh
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def resolve_spec(shape: Sequence[int],
+                 axes: Sequence[Optional[str]],
+                 mesh: Mesh,
+                 rules: Rules = Rules(),
+                 exclude: frozenset = frozenset()) -> P:
+    """Resolve logical axes -> PartitionSpec for this mesh, greedily, with
+    divisibility and no-reuse constraints.  ``exclude`` removes mesh axes
+    from consideration (e.g. axes already Manual inside a shard_map)."""
+    sizes = _mesh_axis_sizes(mesh)
+    used: set = set(exclude)
+    out = []
+    for dim, name in zip(shape, axes):
+        chosen: Tuple[str, ...] = ()
+        for cand in rules.candidates(name):
+            cand = tuple(a for a in cand if a in sizes)
+            if not cand:
+                if name is None or not rules.candidates(name):
+                    break
+                continue
+            if any(a in used for a in cand):
+                continue
+            n = math.prod(sizes[a] for a in cand)
+            if n > 1 and dim % n != 0:
+                continue
+            chosen = cand
+            break
+        used.update(chosen)
+        if len(chosen) == 0:
+            out.append(None)
+        elif len(chosen) == 1:
+            out.append(chosen[0])
+        else:
+            out.append(chosen)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Tree-level helpers
+# ---------------------------------------------------------------------------
+
+
+def _is_param(x):
+    return isinstance(x, Param)
+
+
+def tree_specs(template, mesh: Mesh, rules: Rules = Rules()):
+    return jax.tree.map(
+        lambda p: resolve_spec(p.shape, p.axes, mesh, rules),
+        template, is_leaf=_is_param)
+
+
+def tree_shardings(template, mesh: Mesh, rules: Rules = Rules()):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, resolve_spec(p.shape, p.axes, mesh, rules)),
+        template, is_leaf=_is_param)
+
+
+def tree_sds(template, mesh: Mesh, rules: Rules = Rules()):
+    """ShapeDtypeStructs with shardings — the dry-run currency (no alloc)."""
+    def mk(p: Param):
+        sh = NamedSharding(mesh, resolve_spec(p.shape, p.axes, mesh, rules))
+        return jax.ShapeDtypeStruct(p.shape, p.dtype, sharding=sh)
+    return jax.tree.map(mk, template, is_leaf=_is_param)
+
+
+def _init_one(p: Param, key) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, p.dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, p.dtype)
+    fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+    if p.init == "embed":
+        std = p.scale
+    elif p.init == "small":
+        std = 0.02 * p.scale
+    else:  # fan_in
+        std = p.scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(p.dtype)
+
+
+def init_tree(template, key) -> Any:
+    """Initialize a parameter pytree from a template (deterministic in key)."""
+    leaves, treedef = jax.tree.flatten(template, is_leaf=_is_param)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(p, k) for p, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def _effective_mesh(mesh):
+    """Inside a shard_map manual region, constraints must be built on the
+    ambient abstract mesh (and must not name its Manual axes)."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and am.axis_names:
+            return am
+    except Exception:
+        pass
+    return mesh
+
+
+def _manual_axes(mesh) -> frozenset:
+    from jax.sharding import AxisType
+    types = getattr(mesh, "axis_types", None)
+    if types is None:
+        return frozenset()
+    return frozenset(a for a, t in zip(mesh.axis_names, types)
+                     if t == AxisType.Manual)
+
+
+def logical_constraint(x: jax.Array,
+                       axes: Sequence[Optional[str]],
+                       mesh: Optional[Mesh],
+                       rules: Rules = Rules()) -> jax.Array:
+    """with_sharding_constraint by logical names (no-op without a mesh)."""
+    if mesh is None or mesh.size == 1:
+        return x
+    mesh = _effective_mesh(mesh)
+    spec = resolve_spec(x.shape, tuple(axes), mesh, rules,
+                        exclude=_manual_axes(mesh))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Trace-time activation-constraint context
+# ---------------------------------------------------------------------------
+# Model code calls ``constrain(x, axes)``; it is a no-op unless the launcher
+# traces inside ``activation_sharding(mesh, rules)``.  This is how the
+# "optimized" dry-run mode pins activation layouts (batch->data/pod,
+# heads/d_ff->model) without threading a mesh through every layer signature.
+
+_ACT_CTX: list = []
+
+
+class activation_sharding:
+    def __init__(self, mesh: Mesh, rules: Rules = Rules()):
+        self.mesh, self.rules = mesh, rules
+
+    def __enter__(self):
+        _ACT_CTX.append((self.mesh, self.rules))
+        return self
+
+    def __exit__(self, *exc):
+        _ACT_CTX.pop()
+        return False
+
+
+def current_activation_ctx():
+    """(mesh, rules) when tracing under activation_sharding, else None."""
+    return _ACT_CTX[-1] if _ACT_CTX else None
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    if not _ACT_CTX:
+        return x
+    mesh, rules = _ACT_CTX[-1]
+    return logical_constraint(x, axes, mesh, rules)
+
+
+def constrain_pref(x: jax.Array, *options: Tuple[Optional[str], ...]
+                   ) -> jax.Array:
+    """Constrain with the first/most-sharded of several axis layouts — e.g.
+    attention prefers heads-over-model but falls back to sharding query rows
+    when the head count doesn't divide the TP degree (llama's 24H on 16)."""
+    if not _ACT_CTX:
+        return x
+    mesh, rules = _ACT_CTX[-1]
+    mesh = _effective_mesh(mesh)
+    manual = _manual_axes(mesh)
+    sizes = _mesh_axis_sizes(mesh)
+    best, best_n = None, -1
+    for axes in options:
+        spec = resolve_spec(x.shape, tuple(axes), mesh, rules,
+                            exclude=manual)
+        n = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                n *= sizes[a]
+        if n > best_n:
+            best, best_n = spec, n
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, best))

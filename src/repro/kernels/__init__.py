@@ -1,0 +1,2 @@
+from repro.kernels.ops import (flash_attention_op, maiz_ranking_fused,  # noqa: F401
+                               selective_scan_op)

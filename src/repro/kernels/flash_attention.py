@@ -1,0 +1,126 @@
+"""Pallas TPU flash attention (causal, GQA, optional sliding window).
+
+Online-softmax attention with explicit VMEM tiling:
+
+- grid = (batch, q_heads, n_q_blocks, n_kv_blocks); the kv-block axis is the
+  innermost (sequential on TPU), so the f32 accumulator / running max /
+  running denominator live in VMEM scratch across kv steps;
+- BlockSpecs tile q/k/v into (BQ, head_dim) / (BK, head_dim) VMEM blocks with
+  MXU-aligned last dims (head_dim, BQ, BK multiples of the 128 lane width
+  where the arch allows);
+- GQA: the kv BlockSpec index map folds the query head onto its kv head
+  (h // group) — no repeated kv in HBM;
+- causal + sliding-window masking by absolute row/col ids; fully-masked
+  kv blocks are skipped via ``pl.when`` (the TPU analogue of flash's block
+  skipping).
+
+Validated against ``repro.kernels.ref.attention_ref`` in interpret mode (this
+container is CPU-only; TPU is the deployment target).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  block_q: int, block_k: int, seq_len: int, window: int,
+                  n_kv_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+    cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+
+    # block-level skip: kv block entirely in the future (causal) or entirely
+    # behind the window
+    first_row = qi * block_q
+    last_row = first_row + block_q - 1
+    first_col = ki * block_k
+    last_col = first_col + block_k - 1
+    live = first_col <= last_row
+    if window > 0:
+        live = jnp.logical_and(live, last_col > first_row - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (BQ, hd)
+        k = k_ref[0, 0].astype(jnp.float32)           # (BK, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (q.shape[-1] ** -0.5)
+        mask = cols <= rows
+        if window > 0:
+            mask = jnp.logical_and(mask, cols > rows - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                           # (BQ, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: int = 0, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, S, hd); k/v: (B, K, S, hd) with H % K == 0.  Causal."""
+    B, H, S, hd = q.shape
+    K = k.shape[1]
+    assert H % K == 0, (H, K)
+    group = H // K
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    nq, nk = S // block_q, S // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_len=S,
+        window=window, n_kv_blocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki: (b, h // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki: (b, h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running denom
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: fused fleet-scale MAIZ_RANKING (Eq. 2 + Eq. 1 + argmin).
+
+The paper ranks 3 nodes in a Python loop; at 10^5..10^6 schedulable nodes the
+scoring pass is a memory-streaming problem, so the TPU adaptation fuses, per
+(8, 128) VMEM tile of the node axis:
+
+    cf   = ec · pue · ci_now          (Eq. 2, current)
+    fcf  = ec · pue · ci_fc           (Eq. 2, forecast)
+    score = w1·n(cf) + w2·n(fcf) + w3·(1 − n(eff)) + w4·n(sched)   (Eq. 1)
+    tile-local (min, argmin)          (reduction for the placement pick)
+
+where n(·) is min-max normalization with precomputed lo/hi (a cheap O(N)
+pre-pass — the fused kernel is the bandwidth-bound part: 6 input streams,
+1 output stream, one read each).  ``repro.kernels.ref.maiz_ranking_ref`` is
+the pure-jnp oracle; ``repro.core.ranking.maiz_ranking`` is the
+paper-faithful module implementation both are tested against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+SUBLANES = 8
+TILE = LANES * SUBLANES
+
+
+def _rank_kernel(ec_ref, pue_ref, ci_ref, fc_ref, eff_ref, sw_ref,
+                 lohi_ref, w_ref, score_ref, tmin_ref, targ_ref):
+    ti = pl.program_id(0)
+    ec = ec_ref[...].astype(jnp.float32)
+    pue = pue_ref[...].astype(jnp.float32)
+    base = ec * pue
+    cf = base * ci_ref[...].astype(jnp.float32)
+    fcf = base * fc_ref[...].astype(jnp.float32)
+    eff = eff_ref[...].astype(jnp.float32)
+    sw = sw_ref[...].astype(jnp.float32)
+
+    lohi = lohi_ref[...]                      # (4, 2): lo/hi per term
+
+    def norm(x, i):
+        lo, hi = lohi[i, 0], lohi[i, 1]
+        return (x - lo) / jnp.maximum(hi - lo, 1e-12)
+
+    w = w_ref[...]
+    score = (w[0, 0] * norm(cf, 0) + w[0, 1] * norm(fcf, 1)
+             + w[0, 2] * (1.0 - norm(eff, 2)) + w[0, 3] * norm(sw, 3))
+    score_ref[...] = score
+
+    flat = score.reshape(-1)
+    idx = jnp.argmin(flat)
+    tmin_ref[0, 0] = flat[idx]
+    targ_ref[0, 0] = idx.astype(jnp.int32) + ti * TILE
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def maiz_ranking_pallas(ec, pue, ci_now, ci_fc, eff, sched, lohi, weights,
+                        *, interpret: bool = False):
+    """All node arrays: (N,) with N % 1024 == 0 (pad upstream in ops.py).
+
+    Returns (scores (N,), tile_min (nt,), tile_argmin (nt,))."""
+    n = ec.shape[0]
+    assert n % TILE == 0, n
+    nt = n // TILE
+    shape2d = (nt * SUBLANES, LANES)
+    args = [a.reshape(shape2d) for a in (ec, pue, ci_now, ci_fc, eff, sched)]
+
+    node_spec = pl.BlockSpec((SUBLANES, LANES), lambda t: (t, 0))
+    scores, tmin, targ = pl.pallas_call(
+        _rank_kernel,
+        grid=(nt,),
+        in_specs=[node_spec] * 6 + [
+            pl.BlockSpec((4, 2), lambda t: (0, 0)),      # lo/hi
+            pl.BlockSpec((1, 4), lambda t: (0, 0)),      # weights
+        ],
+        out_specs=[
+            node_spec,
+            pl.BlockSpec((1, 1), lambda t: (t, 0)),
+            pl.BlockSpec((1, 1), lambda t: (t, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(shape2d, jnp.float32),
+            jax.ShapeDtypeStruct((nt, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nt, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*args, lohi, weights.reshape(1, 4))
+    return scores.reshape(n), tmin[:, 0], targ[:, 0]

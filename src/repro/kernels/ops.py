@@ -1,0 +1,66 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in this
+CPU container (Pallas interpret mode) and on real TPU (compiled kernels).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.selective_scan import selective_scan
+from repro.kernels.maizx_rank import TILE, maiz_ranking_pallas
+from repro.kernels.ref import term_lohi
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention_op(q, k, v, *, window: int = 0,
+                       block_q: int = 128, block_k: int = 128,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Causal GQA flash attention: q (B,H,S,hd), k/v (B,K,S,hd)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return flash_attention(q, k, v, window=window, block_q=block_q,
+                           block_k=block_k, interpret=interpret)
+
+
+def maiz_ranking_fused(ec, pue, ci_now, ci_fc, eff, sched, weights, *,
+                       interpret: Optional[bool] = None
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fleet-scale fused MAIZ ranking.
+
+    Arrays (N,) any float dtype; pads N up to the 1024-node tile internally.
+    Returns (scores (N,), best_score, best_node)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n = ec.shape[0]
+    pad = (-n) % TILE
+    lohi = term_lohi(ec, pue, ci_now, ci_fc, eff, sched)
+
+    def padded(x, fill):
+        return jnp.pad(x.astype(jnp.float32), (0, pad), constant_values=fill)
+
+    # padding must never win the argmin: give it worst-case terms
+    args = (padded(ec, 1e9), padded(pue, 2.0), padded(ci_now, 1e9),
+            padded(ci_fc, 1e9), padded(eff, 0.0), padded(sched, 1e9))
+    scores, tmin, targ = maiz_ranking_pallas(
+        *args, lohi, weights.astype(jnp.float32), interpret=interpret)
+    best = jnp.argmin(tmin)
+    return scores[:n], tmin[best], targ[best]
+
+
+def selective_scan_op(dt, x, b, c, a, *, block_d: int = 128,
+                      q_chunk: int = 16,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """Mamba-1 selective scan (VMEM-resident state; see kernel docstring)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return selective_scan(dt, x, b, c, a, block_d=block_d, q_chunk=q_chunk,
+                          interpret=interpret)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  window: int = 0) -> jax.Array:
+    """Causal (optionally banded) GQA attention.
+    q: (B, H, S, hd); k/v: (B, K, S, hd)."""
+    B, H, S, hd = q.shape
+    K = k.shape[1]
+    g = H // K
+    qf = q.reshape(B, K, g, S, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bkgsh,bkth->bkgst", qf, kf) * (hd ** -0.5)
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(S)[None, :]
+    mask = cols <= rows
+    if window > 0:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,bkth->bkgsh", w, v.astype(jnp.float32))
+    return out.reshape(B, H, S, hd).astype(q.dtype)
+
+
+def maiz_ranking_ref(ec, pue, ci_now, ci_fc, eff, sched, lohi, weights):
+    """Oracle for the fused ranking kernel: identical math, plain jnp.
+    Returns (scores, global_min, global_argmin)."""
+    base = ec.astype(jnp.float32) * pue.astype(jnp.float32)
+    terms = [base * ci_now, base * ci_fc, eff.astype(jnp.float32),
+             sched.astype(jnp.float32)]
+
+    def norm(x, i):
+        lo, hi = lohi[i, 0], lohi[i, 1]
+        return (x - lo) / jnp.maximum(hi - lo, 1e-12)
+
+    score = (weights[0] * norm(terms[0], 0) + weights[1] * norm(terms[1], 1)
+             + weights[2] * (1.0 - norm(terms[2], 2))
+             + weights[3] * norm(terms[3], 3))
+    return score, jnp.min(score), jnp.argmin(score)
+
+
+def term_lohi(ec, pue, ci_now, ci_fc, eff, sched) -> jax.Array:
+    """The cheap O(N) normalization pre-pass shared by kernel and oracle."""
+    base = ec.astype(jnp.float32) * pue.astype(jnp.float32)
+    terms = jnp.stack([base * ci_now, base * ci_fc,
+                       eff.astype(jnp.float32), sched.astype(jnp.float32)])
+    return jnp.stack([jnp.min(terms, axis=1), jnp.max(terms, axis=1)],
+                     axis=-1)                      # (4, 2)
+
+
+def selective_scan_ref(dt, x, b, c, a):
+    """Oracle for the mamba1 selective-scan kernel: sequential recurrence.
+    dt/x: (B,S,D); b/c: (B,S,N); a: (D,N)."""
+    Bsz, S, D = x.shape
+    dtf = dt.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+
+    def step(h, t):
+        da = jnp.exp(dtf[:, t, :, None] * a)              # (B, D, N)
+        dbx = (dtf[:, t] * xf[:, t])[..., None] * b[:, t, None, :]
+        h = da * h + dbx
+        y = jnp.sum(h * c[:, t, None, :], axis=-1)        # (B, D)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, D, a.shape[-1]), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

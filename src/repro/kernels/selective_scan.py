@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: Mamba-1 selective scan with VMEM-resident state.
+
+The mamba1 recurrence  h_t = dA_t ⊙ h_{t-1} + dBx_t,  y_t = Σ_N h_t ⊙ C_t
+materializes (B,S,d_inner,N) decay/input tensors in HBM when expressed in
+XLA (the §Roofline falcon-mamba memory wall: 3,675 s/step).  The GPU
+reference streams them through SRAM; the TPU-native adaptation tiles
+d_inner into 128-lane VMEM blocks and walks the sequence in Q-step chunks:
+
+  grid = (batch, d_inner/BD, S/Q)  — the seq axis innermost (sequential on
+  TPU), so the (BD, N) state lives in VMEM scratch across chunks;
+- per chunk, the kernel reads only (Q, BD)-shaped slices of dt/x and
+  (Q, N) B/C slices — HBM traffic is O(B·S·(d_inner+N)) boundary tensors,
+  never O(B·S·d_inner·N);
+- within the chunk the recurrence runs as an unrolled Q-step loop over
+  (BD, N) VMEM registers (VPU elementwise; N=16 keeps the state one
+  (128,16) tile per 128 channels).
+
+Inputs are the *post-projection* per-timestep terms (dt, x, B, C, A) so the
+kernel composes with any surrounding sharding; `ref.py:selective_scan_ref`
+is the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, o_ref, h_ref, *,
+                 q_chunk: int, n_chunks: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...]                                 # (BD, N) f32
+    h = h_ref[...]                                 # (BD, N) f32
+    # walk the chunk sequentially; all operands stay in VMEM
+    for t in range(q_chunk):
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)         # (BD,)
+        x_t = x_ref[0, t, :].astype(jnp.float32)           # (BD,)
+        b_t = b_ref[0, t, :].astype(jnp.float32)           # (N,)
+        c_t = c_ref[0, t, :].astype(jnp.float32)           # (N,)
+        da = jnp.exp(dt_t[:, None] * a)                    # (BD, N)
+        dbx = (dt_t * x_t)[:, None] * b_t[None, :]
+        h = da * h + dbx
+        o_ref[0, t, :] = jnp.sum(h * c_t[None, :], axis=1).astype(o_ref.dtype)
+    h_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "q_chunk",
+                                              "interpret"))
+def selective_scan(dt: jax.Array, x: jax.Array, b: jax.Array, c: jax.Array,
+                   a: jax.Array, *, block_d: int = 128, q_chunk: int = 16,
+                   interpret: bool = False) -> jax.Array:
+    """dt, x: (B, S, D); b, c: (B, S, N); a: (D, N) [A = -exp(A_log)].
+    Returns y: (B, S, D) with y = Σ_N h ⊙ C per step."""
+    B, S, D = x.shape
+    N = b.shape[-1]
+    assert D % block_d == 0, (D, block_d)
+    assert S % q_chunk == 0, (S, q_chunk)
+    nd, ns = D // block_d, S // q_chunk
+
+    kernel = functools.partial(_scan_kernel, q_chunk=q_chunk, n_chunks=ns)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nd, ns),
+        in_specs=[
+            pl.BlockSpec((1, q_chunk, block_d),
+                         lambda bi, di, si: (bi, si, di)),    # dt
+            pl.BlockSpec((1, q_chunk, block_d),
+                         lambda bi, di, si: (bi, si, di)),    # x
+            pl.BlockSpec((1, q_chunk, N),
+                         lambda bi, di, si: (bi, si, 0)),     # B
+            pl.BlockSpec((1, q_chunk, N),
+                         lambda bi, di, si: (bi, si, 0)),     # C
+            pl.BlockSpec((block_d, N),
+                         lambda bi, di, si: (di, 0)),         # A
+        ],
+        out_specs=pl.BlockSpec((1, q_chunk, block_d),
+                               lambda bi, di, si: (bi, si, di)),
+        out_shape=jax.ShapeDtypeStruct((B, S, D), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(dt, x, b, c, a)

@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init).  Everything else follows.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import subprocess    # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Any, Dict, Optional, Tuple  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, get_config, get_shape  # noqa: E402
+from repro.configs.base import ArchConfig, ShapeSpec  # noqa: E402
+from repro.distributed.sharding import (Param, Rules, activation_sharding,  # noqa: E402
+                                        tree_sds, tree_shardings)
+from repro.launch import roofline as rl  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.settings import cell_settings  # noqa: E402
+from repro.models.model import Model, ModelFlags, build_model  # noqa: E402
+from repro.train.optimizer import AdamWConfig, opt_template  # noqa: E402
+from repro.train.train_step import make_train_step  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input (no alloc)
+# ---------------------------------------------------------------------------
+
+
+def batch_template(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Param]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        t: Dict[str, Param] = {}
+        if cfg.input_mode == "embeddings":
+            t["embeds"] = Param((B, S, cfg.d_model), ("batch", None, None))
+            t["positions"] = Param((B, S, 3), ("batch", None, None),
+                                   dtype=jnp.int32)
+        else:
+            t["tokens"] = Param((B, S), ("batch", None), dtype=jnp.int32)
+        if shape.kind == "train":
+            t["labels"] = Param((B, S), ("batch", None), dtype=jnp.int32)
+        return t
+    # decode: one new token against a seq_len cache
+    t = {"positions": Param((B,), ("batch",), dtype=jnp.int32)}
+    if cfg.input_mode == "embeddings":
+        t["embed"] = Param((B, cfg.d_model), ("batch", None))
+        t["rope_positions"] = Param((B, 3), ("batch", None), dtype=jnp.int32)
+    else:
+        t["token"] = Param((B,), ("batch",), dtype=jnp.int32)
+    return t
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh, rules: Rules,
+                model: Model) -> Dict[str, Any]:
+    """All lowering inputs as sharded ShapeDtypeStructs."""
+    specs: Dict[str, Any] = {
+        "batch": tree_sds(batch_template(cfg, shape), mesh, rules)}
+    ptpl = model.template()
+    specs["params"] = tree_sds(ptpl, mesh, rules)
+    if shape.kind == "train":
+        specs["opt"] = tree_sds(opt_template(ptpl), mesh, rules)
+        specs["step"] = jax.ShapeDtypeStruct((), jnp.int32)
+    if shape.kind == "decode":
+        specs["caches"] = tree_sds(
+            model.cache_template(shape.global_batch, shape.seq_len),
+            mesh, rules)
+    return specs
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS per step: 6·N_active·tokens (train), 2·N_active·tokens
+    (prefill), 2·N_active·batch (decode, per generated token)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch
+
+
+# ---------------------------------------------------------------------------
+# one cell
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             mode: str = "baseline") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if not cfg.supports_shape(shape):
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "mode": mode, "status": "skipped",
+                "reason": "full-attention arch at 500k context (O(L^2)); "
+                          "documented skip"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    st = cell_settings(cfg, shape, mode)
+    model = build_model(cfg, st.flags)
+    rules = st.rules
+    specs = input_specs(cfg, shape, mesh, rules, model)
+    if shape.kind == "train" and multi_pod and st.grad_sync != "auto":
+        # explicit pod-sync (shard_map manual over "pod"): inputs must enter
+        # sharded over "pod" ONLY — a ("pod","data")-sharded operand crossing
+        # the manual boundary trips an XLA SPMD partitioner CHECK; GSPMD
+        # re-shards over "data" inside via the activation constraints.
+        specs["batch"] = tree_sds(
+            batch_template(cfg, shape), mesh,
+            rules.with_overrides(batch=(("pod",), ())))
+
+    import contextlib
+    act_ctx = (activation_sharding(mesh, rules) if st.constrain_acts
+               else contextlib.nullcontext())
+
+    t0 = time.time()
+    if shape.kind == "train":
+        step_fn = make_train_step(
+            model, AdamWConfig(), microbatches=st.microbatches,
+            grad_sync=(st.grad_sync if multi_pod else "auto"), mesh=mesh)
+
+        def fn(params, opt, step, batch):
+            from repro.train.train_step import TrainState
+            state = TrainState(params=params, opt=opt, step=step)
+            new_state, metrics = step_fn(state, batch)
+            return new_state.params, new_state.opt, new_state.step, metrics
+
+        args = (specs["params"], specs["opt"], specs["step"], specs["batch"])
+        shardings = tuple(jax.tree.map(lambda s: s.sharding, a) for a in args)
+        with act_ctx:
+            lowered = jax.jit(fn, out_shardings=(
+                shardings[0], shardings[1], None, None)).lower(*args)
+    elif shape.kind == "prefill":
+        def fn(params, batch):
+            return model.prefill(params, batch, shape.seq_len)
+        with act_ctx:
+            lowered = jax.jit(fn).lower(specs["params"], specs["batch"])
+    else:
+        def fn(params, caches, batch):
+            return model.decode_step(params, caches, batch)
+        cache_shardings = jax.tree.map(lambda s: s.sharding, specs["caches"])
+        with act_ctx:
+            lowered = jax.jit(fn, out_shardings=(None, cache_shardings)).lower(
+                specs["params"], specs["caches"], specs["batch"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    roof = rl.from_compiled(compiled, chips)
+    mf = model_flops(cfg, shape)
+    mem = compiled.memory_analysis()
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "mode": mode, "status": "ok",
+        "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+        },
+        "roofline": roof.as_dict(mf),
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    return result
+
+
+# ---------------------------------------------------------------------------
+# CLI + orchestration
+# ---------------------------------------------------------------------------
+
+
+def _result_path(arch, shape, multi_pod, mode):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    pod = "multipod" if multi_pod else "pod"
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{pod}__{mode}.json")
+
+
+def run_all(jobs: int, modes, meshes, archs=None, shapes=None,
+            force: bool = False) -> int:
+    cells = []
+    for arch in (archs or ARCHS):
+        for shape in (shapes or SHAPES):
+            for multi_pod in meshes:
+                for mode in modes:
+                    out = _result_path(arch, shape, multi_pod, mode)
+                    if force or not os.path.exists(out):
+                        cells.append((arch, shape, multi_pod, mode, out))
+    print(f"{len(cells)} cells to run, {jobs} parallel")
+    procs: Dict[Any, Tuple] = {}
+    failed = []
+    pending = list(cells)
+    while pending or procs:
+        while pending and len(procs) < jobs:
+            arch, shape, multi_pod, mode, out = pending.pop(0)
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mode", mode,
+                   "--out", out]
+            if multi_pod:
+                cmd.append("--multi-pod")
+            p = subprocess.Popen(cmd, stdout=subprocess.PIPE,
+                                 stderr=subprocess.STDOUT)
+            procs[p] = (arch, shape, multi_pod, mode, out)
+        time.sleep(2)
+        for p in list(procs):
+            if p.poll() is None:
+                continue
+            arch, shape, multi_pod, mode, out = procs.pop(p)
+            tag = f"{arch}/{shape}/{'multi' if multi_pod else 'pod'}/{mode}"
+            if p.returncode == 0 and os.path.exists(out):
+                with open(out) as f:
+                    r = json.load(f)
+                print(f"[done] {tag}: {r['status']} "
+                      f"compile={r.get('compile_s', '-')}s "
+                      f"dom={r.get('roofline', {}).get('dominant', '-')}")
+            else:
+                failed.append(tag)
+                print(f"[FAIL] {tag} rc={p.returncode}")
+                print(p.stdout.read().decode()[-2000:])
+    print(f"finished; {len(failed)} failures: {failed}")
+    return 1 if failed else 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="baseline")
+    ap.add_argument("--out")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--meshes", default="pod,multipod")
+    ap.add_argument("--archs", default="")
+    ap.add_argument("--shapes", default="")
+    args = ap.parse_args()
+
+    if args.all:
+        meshes = [m == "multipod" for m in args.meshes.split(",")]
+        sys.exit(run_all(args.jobs, modes=[args.mode], meshes=meshes,
+                         archs=args.archs.split(",") if args.archs else None,
+                         shapes=args.shapes.split(",") if args.shapes else None,
+                         force=args.force))
+
+    try:
+        result = run_cell(args.arch, args.shape, args.multi_pod, args.mode)
+    except Exception:
+        result = {"arch": args.arch, "shape": args.shape,
+                  "multi_pod": args.multi_pod, "mode": args.mode,
+                  "status": "error", "traceback": traceback.format_exc()}
+    out = args.out or _result_path(args.arch, args.shape, args.multi_pod,
+                                   args.mode)
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    if result["status"] == "ok":
+        r = result["roofline"]
+        print(f"{args.arch} {args.shape} "
+              f"{'multipod' if args.multi_pod else 'pod'} {args.mode}: "
+              f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+              f"collective={r['collective_s']:.4f}s -> {r['dominant']} "
+              f"(roofline_frac={r.get('roofline_fraction', 0):.3f})")
+        print("memory_analysis:", result["memory"])
+    else:
+        print(result.get("reason") or result.get("traceback"))
+        sys.exit(0 if result["status"] == "skipped" else 1)
+
+
+if __name__ == "__main__":
+    main()

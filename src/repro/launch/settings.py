@@ -1,0 +1,104 @@
+"""Per-(arch × shape) dry-run settings: baseline vs optimized.
+
+``baseline`` is the paper-faithful / naive configuration: default sharding
+rules, full remat, no microbatching, unchunked vocab loss, GSPMD-auto
+gradient sync.  ``optimized`` holds the §Perf hillclimb winners for the three
+chosen cells (everything else inherits baseline — the roofline table reports
+baseline for all 40 cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.distributed.sharding import Rules
+from repro.models.model import ModelFlags
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSettings:
+    flags: ModelFlags = ModelFlags()
+    microbatches: int = 1
+    grad_sync: str = "auto"          # auto | int8 | fp32 (multi-pod only)
+    rules: Rules = Rules()
+    constrain_acts: bool = False     # trace under activation_sharding ctx
+
+
+_BASE = CellSettings()
+# generic optimized default: pin activation layouts (GSPMD left alone
+# replicates compute — see EXPERIMENTS.md §Perf iteration 1) and use the
+# SSD chunk-matmul path for mamba2 archs (§Perf cell A)
+_OPT_BASE = CellSettings(constrain_acts=True,
+                         flags=ModelFlags(ssm_algo="ssd", ssm_chunk=128))
+
+# (arch, shape, mode) -> overrides; filled in during the §Perf iteration.
+_OVERRIDES: Dict[Tuple[str, str, str], CellSettings] = {}
+
+
+def register_override(arch: str, shape: str, mode: str,
+                      settings: CellSettings) -> None:
+    _OVERRIDES[(arch, shape, mode)] = settings
+
+
+def cell_settings(cfg: ArchConfig, shape: ShapeSpec,
+                  mode: str = "baseline") -> CellSettings:
+    key = (cfg.name, shape.name, mode)
+    if key in _OVERRIDES:
+        return _OVERRIDES[key]
+    return _BASE if mode == "baseline" else _OPT_BASE
+
+
+# ---------------------------------------------------------------------------
+# §Perf hillclimb winners (see EXPERIMENTS.md §Perf for the full
+# hypothesis → change → measure log).
+# ---------------------------------------------------------------------------
+
+# zamba2: constraints + SSD chunk-matmul mamba2 (kills (B,S,di,N) scan terms)
+register_override("zamba2-1.2b", "train_4k", "optimized", CellSettings(
+    flags=ModelFlags(ssm_algo="ssd", ssm_chunk=128),
+    constrain_acts=True))
+
+# moonshot multi-pod: int8-compressed cross-pod gradient sync
+register_override("moonshot-v1-16b-a3b", "train_4k", "int8", CellSettings(
+    grad_sync="int8", constrain_acts=True))
+
+# qwen2-vl: every dim divides the mesh and GSPMD's unconstrained choices
+# beat the generic constraint set (measured: frac 0.159 -> 0.130 with
+# constraints) — optimized mode falls back to baseline for this arch.
+for _shape in ("train_4k", "prefill_32k", "decode_32k"):
+    register_override("qwen2-vl-72b", _shape, "optimized", CellSettings())
+
+# llama3.2: heads=24 don't divide TP=16 -> megatron TP pays a (B,H,S,hd)
+# reshard per layer.  Switch to FULL sequence parallelism: S over "model",
+# no weight TP (FSDP gathers are 40x cheaper than the activation reshards).
+_LLAMA_SP_RULES = Rules().with_overrides(
+    seq=(("model",), ()),
+    sp_seq=(("model",), ()),
+    tp=((),),
+    heads=((),),
+    kv_heads=((),),
+    vocab=((),),
+)
+# iteration B3: under SP the q-chunk scan is redundant (rows are already
+# model-sharded) and its reshape makes GSPMD scatter-add d_q via a 7.2s
+# all-reduce -> single-chunk attention (scores stay row-sharded, remat'd)
+register_override("llama3.2-3b", "train_4k", "optimized", CellSettings(
+    rules=_LLAMA_SP_RULES, constrain_acts=True,
+    flags=ModelFlags(attn_chunk=4096)))
+
+# int8 cross-pod gradient sync on top of the SP config (multi-pod only);
+# the MoE+int8 nesting trips an XLA CPU partitioner bug, so the compression
+# demonstration cell is llama (dense) — see EXPERIMENTS.md §Perf.
+register_override("llama3.2-3b", "train_4k", "int8", CellSettings(
+    rules=_LLAMA_SP_RULES, constrain_acts=True, grad_sync="int8"))
+
+# isolation variants (see EXPERIMENTS.md §Perf iteration C3): explicit pod
+# sync without activation constraints (constraint+manual trips the XLA CPU
+# partitioner) in three wire formats
+register_override("llama3.2-3b", "train_4k", "int8_noconstraint",
+                  CellSettings(grad_sync="int8"))
+register_override("llama3.2-3b", "train_4k", "int16_noconstraint",
+                  CellSettings(grad_sync="int16"))
+register_override("llama3.2-3b", "train_4k", "fp32_noconstraint",
+                  CellSettings(grad_sync="fp32"))

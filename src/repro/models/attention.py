@@ -1,0 +1,220 @@
+"""GQA attention: chunked (flash-style) train/prefill path + KV-cache decode.
+
+The train/prefill path processes query chunks under ``jax.checkpoint`` so the
+(chunk × T) score matrix is never live for more than one chunk — the XLA
+analogue of flash attention (the true Pallas flash kernel in
+``repro.kernels.flash_attention`` is the TPU target; this path is what the
+dry-run lowers, and what CPU tests execute).
+
+Sliding-window attention (h2o-danube) uses the same core with a band mask and
+a ring-buffer KV cache whose size is the window, which is what makes
+``long_500k`` decode feasible for a dense-attention arch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import Param, constrain, constrain_pref
+from repro.models.layers import apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def attn_template(cfg: ArchConfig) -> Dict[str, Param]:
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": Param((D, H * hd), ("fsdp", "tp")),
+        "wk": Param((D, K * hd), ("fsdp", "tp")),
+        "wv": Param((D, K * hd), ("fsdp", "tp")),
+        "wo": Param((H * hd, D), ("tp", "fsdp")),
+    }
+
+
+class KVCache(NamedTuple):
+    k: jax.Array       # (B, S_cache, K, hd)
+    v: jax.Array       # (B, S_cache, K, hd)
+
+
+# ---------------------------------------------------------------------------
+# Core masked attention over one query block
+# ---------------------------------------------------------------------------
+
+
+def _block_attend(q: jax.Array, k: jax.Array, v: jax.Array,
+                  row_ids: jax.Array, col_ids: jax.Array,
+                  window: int) -> jax.Array:
+    """q: (B, Q, H, hd); k/v: (B, T, H, hd) — kv pre-expanded to H heads so
+    the head axis shards over "model" even when TP > n_kv_heads (standard
+    GQA-under-TP).  ids give absolute positions; window <= 0 = full causal."""
+    hd = q.shape[-1]
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqhd,bthd->bhqt", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = col_ids[None, :] <= row_ids[:, None]
+    if window > 0:
+        mask &= col_ids[None, :] > (row_ids[:, None] - window)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqt,bthd->bqhd", w.astype(v.dtype), v)
+    return out
+
+
+def attention_core(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   window: int = 0, q_offset: int = 0,
+                   chunk: int = 1024) -> jax.Array:
+    """Causal (optionally banded) attention, scanning over query chunks.
+
+    q: (B, S, K, G, hd) vs k/v: (B, T, K, hd) with absolute query positions
+    q_offset..q_offset+S-1 and key positions 0..T-1.
+    Returns (B, S, K, G, hd).
+    """
+    B, S, K, G, hd = q.shape
+    H = K * G
+    T = k.shape[1]
+    chunk = min(chunk, S)
+    if S % chunk:
+        pad = chunk - S % chunk
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    nc = q.shape[1] // chunk
+    qh = q.reshape(B, nc, chunk, H, hd)
+    qs = constrain(jnp.moveaxis(qh, 1, 0), None, "batch", None, "heads", None)
+    # expand kv to H heads: the head axis then shards over "model" even for
+    # kv_heads < TP degree (each shard keeps only its own expanded slices)
+    ke = constrain(jnp.repeat(k, G, axis=2), "batch", None, "heads", None)
+    ve = constrain(jnp.repeat(v, G, axis=2), "batch", None, "heads", None)
+    col_ids = jnp.arange(T)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, args):
+        qb, i0 = args
+        qb = constrain_pref(qb, ("batch", None, "heads", None),
+                            ("batch", "sp_seq", None, None))
+        rows = i0 + jnp.arange(chunk) + q_offset
+        out = _block_attend(qb, ke, ve, rows, col_ids, window)
+        return carry, constrain_pref(out, ("batch", None, "heads", None),
+                                     ("batch", "sp_seq", None, None))
+
+    i0s = jnp.arange(nc) * chunk
+    _, outs = jax.lax.scan(body, (), (qs, i0s))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nc * chunk, K, G, hd)
+    return out[:, :S]
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill forward
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(cfg: ArchConfig, p, x, positions):
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = constrain((x @ p["wq"]).reshape(B, S, K, H // K, hd),
+                  "batch", "seq", "kv_heads", None, None)
+    k = constrain((x @ p["wk"]).reshape(B, S, K, hd),
+                  "batch", "seq", "kv_heads", None)
+    v = constrain((x @ p["wv"]).reshape(B, S, K, hd),
+                  "batch", "seq", "kv_heads", None)
+    if cfg.rope != "none":
+        q = apply_rope(q.reshape(B, S, H, hd), positions,
+                       cfg.rope_theta).reshape(B, S, K, H // K, hd)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_apply(cfg: ArchConfig, p: Dict[str, jax.Array], x: jax.Array,
+                    positions: jax.Array, *, chunk: int = 1024) -> jax.Array:
+    """Full training-time attention (no cache)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    window = cfg.window if cfg.attention == "swa" else 0
+    out = attention_core(q, k, v, window=window, chunk=chunk)
+    return out.reshape(B, S, cfg.n_heads * cfg.head_dim) @ p["wo"]
+
+
+def attention_prefill(cfg: ArchConfig, p, x, positions, cache_len: int,
+                      *, chunk: int = 1024) -> Tuple[jax.Array, KVCache]:
+    """Prefill: returns output and a cache sized ``cache_len``.
+
+    For SWA the cache is the ring buffer of the last ``window`` positions.
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    window = cfg.window if cfg.attention == "swa" else 0
+    out = attention_core(q, k, v, window=window, chunk=chunk)
+    if cfg.attention == "swa":
+        cl = min(cache_len, cfg.window)
+        # last min(S, cl) tokens land at slots (pos % cl) — a rotation of
+        # the tail; build it explicitly.
+        n = min(S, cl)
+        tail_k, tail_v = k[:, -n:], v[:, -n:]
+        start = S - n
+        slots = (start + jnp.arange(n)) % cl
+        ck = jnp.zeros((B, cl) + k.shape[2:], k.dtype).at[:, slots].set(tail_k)
+        cv = jnp.zeros((B, cl) + v.shape[2:], v.dtype).at[:, slots].set(tail_v)
+        cache = KVCache(ck, cv)
+    else:
+        pad = cache_len - S
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = KVCache(ck, cv)
+    return out.reshape(B, S, cfg.n_heads * cfg.head_dim) @ p["wo"], cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token per active row; per-row positions)
+# ---------------------------------------------------------------------------
+
+
+def cache_template(cfg: ArchConfig, batch: int, seq_len: int) -> Dict[str, Param]:
+    cl = min(seq_len, cfg.window) if cfg.attention == "swa" else seq_len
+    shp = (batch, cl, cfg.n_kv_heads, cfg.head_dim)
+    axes = ("batch", "kv_seq", "kv_heads", None)
+    return {"k": Param(shp, axes, init="zeros"),
+            "v": Param(shp, axes, init="zeros")}
+
+
+def attention_decode(cfg: ArchConfig, p, x, cache: KVCache,
+                     positions: jax.Array,
+                     rope_positions: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, KVCache]:
+    """x: (B, 1, D); positions: (B,) absolute position of the new token
+    (cache slot index); rope_positions optionally carries M-RoPE ids (B, 3)."""
+    B = x.shape[0]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rp = positions if rope_positions is None else rope_positions
+    q, k_new, v_new = _project_qkv(cfg, p, x, rp[:, None])
+    cl = cache.k.shape[1]
+    is_swa = cfg.attention == "swa"
+    slot = positions % cl if is_swa else positions
+    rows = jnp.arange(B)
+    ck = cache.k.at[rows, slot].set(k_new[:, 0])
+    cv = cache.v.at[rows, slot].set(v_new[:, 0])
+
+    scale = hd ** -0.5
+    scores = jnp.einsum("bkgh,btkh->bkgt", q[:, 0], ck,
+                        preferred_element_type=jnp.float32) * scale
+    slot_ids = jnp.arange(cl)[None, :]                    # (1, cl)
+    if is_swa:
+        # slot s holds absolute position p' with p' % cl == s and
+        # p' in (pos-cl, pos]; valid once written.
+        ahead = (slot_ids > slot[:, None]).astype(positions.dtype)
+        abs_pos = (positions[:, None] // cl - ahead) * cl + slot_ids
+        valid = (abs_pos >= 0) & (abs_pos <= positions[:, None]) \
+            & (abs_pos > positions[:, None] - cl)
+    else:
+        valid = slot_ids <= positions[:, None]
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", w.astype(cv.dtype), cv)
+    out = out.reshape(B, 1, H * hd) @ p["wo"]
+    return out, KVCache(ck, cv)

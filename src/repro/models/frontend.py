@@ -1,0 +1,44 @@
+"""Modality frontend STUBS (per the brief: backbone-only for audio/vlm).
+
+- musicgen: EnCodec tokenization is stubbed — the backbone consumes flattened
+  codec token ids (vocab 2048) directly; ``fake_codec_tokens`` generates a
+  deterministic stream for tests/examples.
+- qwen2-vl: the ViT frontend is stubbed — ``fake_patch_embeddings`` emits
+  precomputed patch embeddings (B, S, d_model) and the 3-channel M-RoPE
+  position ids (temporal, height, width) the backbone's rotary layer expects.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def fake_codec_tokens(cfg: ArchConfig, batch: int, seq: int,
+                      seed: int = 0) -> jax.Array:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32)
+
+
+def mrope_position_ids(batch: int, seq: int, *, grid: int = 32) -> jax.Array:
+    """(B, S, 3) int32 position ids: [temporal, height, width].
+
+    The stub models a vision-prefix layout: the first grid*grid positions are
+    image patches (t=0, raster-scan h/w), the rest is text (t=h=w advancing
+    together, qwen2-vl style)."""
+    s = np.arange(seq)
+    n_img = min(grid * grid, seq)
+    t = np.where(s < n_img, 0, s - n_img + 1)
+    h = np.where(s < n_img, s // grid, s - n_img + 1)
+    w = np.where(s < n_img, s % grid, s - n_img + 1)
+    ids = np.stack([t, h, w], axis=-1)
+    return jnp.asarray(np.broadcast_to(ids, (batch, seq, 3)), jnp.int32)
+
+
+def fake_patch_embeddings(cfg: ArchConfig, batch: int, seq: int,
+                          seed: int = 0) -> jax.Array:
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((batch, seq, cfg.d_model), dtype=np.float32)
+    return jnp.asarray(x * 0.02, jnp.bfloat16)

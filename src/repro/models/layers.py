@@ -1,0 +1,133 @@
+"""Shared layer primitives: norms, RoPE / M-RoPE, MLP variants, embeddings.
+
+Params are declarative ``Param`` templates (shape + logical sharding axes);
+forward functions take plain array dicts.  Compute dtype is bf16, with f32
+accumulation where numerically required (norms, softmax, loss).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Param, constrain
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_template(d: int) -> Param:
+    return Param((d,), (None,), init="ones", dtype=jnp.float32)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale * w).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE and 3-section M-RoPE for qwen2-vl)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n_heads, head_dim); positions: (..., S) or (..., S, 3) for
+    M-RoPE (temporal/height/width sections, qwen2-vl style)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    if positions.ndim == x.ndim - 2:                  # plain RoPE
+        ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    else:                                             # M-RoPE: (..., S, 3)
+        n = inv.shape[0]
+        # split frequency channels into 3 sections: t gets 2/4, h/w get 1/4 each
+        s1, s2 = n // 2, (3 * n) // 4
+        sec = jnp.concatenate([
+            jnp.zeros((s1,), jnp.int32),
+            jnp.ones((s2 - s1,), jnp.int32),
+            jnp.full((n - s2,), 2, jnp.int32)])
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(sec, positions.shape[:-1] + (n,)).astype(jnp.int32),
+            axis=-1)                                  # (..., n) per-channel pos
+        ang = pos * inv
+    cos = jnp.cos(ang)[..., None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs: SwiGLU / squared-ReLU (nemotron) / GELU (musicgen)
+# ---------------------------------------------------------------------------
+
+
+def mlp_template(d: int, f: int, kind: str) -> Dict[str, Param]:
+    if kind == "swiglu":
+        return {
+            "w_gate": Param((d, f), ("fsdp", "tp")),
+            "w_up": Param((d, f), ("fsdp", "tp")),
+            "w_down": Param((f, d), ("tp", "fsdp")),
+        }
+    return {
+        "w_up": Param((d, f), ("fsdp", "tp")),
+        "w_down": Param((f, d), ("tp", "fsdp")),
+    }
+
+
+def mlp_apply(p: Dict[str, jax.Array], x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["w_up"]))
+    elif kind == "gelu":
+        h = jax.nn.gelu(x @ p["w_up"])
+    else:
+        raise ValueError(f"unknown mlp kind {kind!r}")
+    h = constrain(h, "batch", "seq", "tp")
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embed_template(vocab: int, d: int) -> Param:
+    return Param((vocab, d), ("vocab", "fsdp"), init="embed", scale=0.02)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def lm_head(table_or_w: jax.Array, x: jax.Array, *, tied: bool) -> jax.Array:
+    w = table_or_w.T if tied else table_or_w
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean cross-entropy over valid tokens; logits f32 (B, S, V)."""
+    logits = logits.astype(jnp.float32)
+    lz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,156 @@
+"""Model facade: template / init / loss / prefill / decode for any arch.
+
+``build_model(cfg)`` returns a ``Model`` whose methods are pure functions of
+(params, batch) — jit/pjit them at the call site (launcher, tests, dry-run).
+
+Batch conventions
+-----------------
+train:   {"tokens": (B,S) i32 | "embeds": (B,S,D) bf16,
+          "labels": (B,S) i32, ["positions": (B,S) or (B,S,3) i32]}
+prefill: {"tokens"|"embeds", ["positions"]}
+decode:  {"token": (B,) i32 | "embed": (B,D), "positions": (B,) i32}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import Param, constrain
+from repro.models import transformer as tr
+from repro.models.layers import (embed_lookup, embed_template, lm_head,
+                                 rmsnorm, rmsnorm_template, softmax_xent)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelFlags:
+    remat: str = "full"          # none | full | dots
+    attn_chunk: int = 1024
+    ssm_chunk: int = 64
+    ssm_algo: str = "scan"       # scan | ssd (mamba2 only)
+    loss_chunk: int = 0          # 0 = unchunked vocab loss
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, flags: ModelFlags = ModelFlags()):
+        self.cfg = cfg
+        self.flags = flags
+
+    # ------------------------------------------------------------------
+    def template(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        t: Dict[str, Any] = {
+            "embed": embed_template(cfg.vocab, cfg.d_model),
+            "stack": tr.stack_template(cfg),
+            "ln_f": rmsnorm_template(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            t["lm_head"] = Param((cfg.d_model, cfg.vocab), ("fsdp", "vocab"),
+                                 init="fan_in")
+        return t
+
+    def init(self, key) -> Dict[str, Any]:
+        from repro.distributed.sharding import init_tree
+        return init_tree(self.template(), key)
+
+    def cache_template(self, batch: int, seq_len: int) -> Dict[str, Any]:
+        return tr.stack_cache_template(self.cfg, batch, seq_len)
+
+    # ------------------------------------------------------------------
+    def _inputs(self, batch: Dict[str, jax.Array], params) -> Tuple:
+        cfg = self.cfg
+        if cfg.input_mode == "embeddings":
+            x = batch["embeds"]
+        else:
+            x = embed_lookup(params["embed"], batch["tokens"])
+        # kill feature-sharded/token-replicated propagation from the
+        # embedding table's fallback sharding right at the source
+        x = constrain(x, "batch", "seq", None)
+        B, S = x.shape[:2]
+        if "positions" in batch:
+            pos = batch["positions"]
+        elif cfg.rope == "mrope":
+            raise ValueError("mrope arch requires explicit positions")
+        else:
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        return x, pos
+
+    def _logits(self, params, h: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        h = rmsnorm(h, params["ln_f"], cfg.norm_eps)
+        w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        return lm_head(w, h, tied=cfg.tie_embeddings)
+
+    # ------------------------------------------------------------------
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg, fl = self.cfg, self.flags
+        x, pos = self._inputs(batch, params)
+        h, aux = tr.stack_apply(cfg, params["stack"], x, pos,
+                                remat=fl.remat, attn_chunk=fl.attn_chunk,
+                                ssm_chunk=fl.ssm_chunk, ssm_algo=fl.ssm_algo)
+        labels = batch["labels"]
+        if fl.loss_chunk:
+            # chunk the (B,S,V) logits over S: memory-bound archs
+            nc = -(-h.shape[1] // fl.loss_chunk)
+            pad = nc * fl.loss_chunk - h.shape[1]
+            hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+            lp = jnp.pad(labels, ((0, 0), (0, pad)))
+            mp = jnp.pad(jnp.ones_like(labels, jnp.float32),
+                         ((0, 0), (0, pad)))
+            hs = jnp.moveaxis(
+                hp.reshape(h.shape[0], nc, fl.loss_chunk, -1), 1, 0)
+            ls = jnp.moveaxis(lp.reshape(h.shape[0], nc, fl.loss_chunk), 1, 0)
+            ms = jnp.moveaxis(mp.reshape(h.shape[0], nc, fl.loss_chunk), 1, 0)
+
+            def body(acc, args):
+                hc, lc, mc = args
+                logits = self._logits(params, hc)
+                lz = jax.nn.logsumexp(logits, axis=-1)
+                gold = jnp.take_along_axis(
+                    logits, lc[..., None], axis=-1)[..., 0]
+                return (acc[0] + jnp.sum((lz - gold) * mc),
+                        acc[1] + jnp.sum(mc)), None
+
+            body = jax.checkpoint(body, prevent_cse=False)
+            (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (hs, ls, ms))
+            ce = tot / jnp.maximum(cnt, 1.0)
+        else:
+            logits = constrain(self._logits(params, h),
+                               "batch", "seq", "vocab")
+            ce = softmax_xent(logits, labels)
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch, cache_len: int):
+        cfg, fl = self.cfg, self.flags
+        x, pos = self._inputs(batch, params)
+        h, caches = tr.stack_prefill(cfg, params["stack"], x, pos, cache_len,
+                                     attn_chunk=fl.attn_chunk,
+                                     ssm_chunk=fl.ssm_chunk,
+                                     ssm_algo=fl.ssm_algo)
+        logits = self._logits(params, h[:, -1:])[:, 0]
+        return logits, caches
+
+    def decode_step(self, params, caches, batch):
+        cfg = self.cfg
+        if cfg.input_mode == "embeddings":
+            x = batch["embed"][:, None]
+        else:
+            x = embed_lookup(params["embed"], batch["token"][:, None])
+        pos = batch["positions"]                     # (B,) linear slots
+        rope_pos = None
+        if cfg.rope == "mrope":
+            rope_pos = batch.get("rope_positions",
+                                 jnp.stack([pos] * 3, axis=-1))
+        h, caches = tr.stack_decode(cfg, params["stack"], caches, x, pos,
+                                    rope_pos)
+        logits = self._logits(params, h)[:, 0]
+        return logits, caches
+
+
+def build_model(cfg: ArchConfig, flags: ModelFlags = ModelFlags()) -> Model:
+    return Model(cfg, flags)

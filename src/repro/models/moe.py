@@ -1,0 +1,183 @@
+"""Mixture-of-Experts: top-k router + sort-based capacity dispatch.
+
+Dispatch is per-group (group = one sequence) so the argsort never crosses the
+data-parallel shard boundary — tokens of a sequence stay on their shard, and
+only the expert-parallel einsum communicates (all-to-all inserted by GSPMD
+when experts are sharded over the ``model`` axis).  This is the
+memory-sane alternative to GShard's (T, E, C) one-hot dispatch: buffers are
+O(E·C·D) per group instead of O(T·E·C).
+
+Capacity: C = ceil(top_k · S · capacity_factor / E); overflow tokens are
+dropped (their combine weight contributes nothing) — standard switch/GShard
+semantics.  The load-balance auxiliary loss is the switch-transformer one.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import (Param, constrain,
+                                        current_activation_ctx)
+from repro.models.layers import mlp_apply
+
+
+def moe_template(cfg: ArchConfig) -> Dict[str, Param]:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    t: Dict[str, Param] = {
+        "router": Param((D, E), ("fsdp", None), init="small",
+                        dtype=jnp.float32),
+    }
+    names = (("w_gate", "w_up", "w_down") if cfg.mlp == "swiglu"
+             else ("w_up", "w_down"))
+    for n in names:
+        if n == "w_down":
+            t[n] = Param((E, F, D), ("experts", "tp", "fsdp"))
+        else:
+            t[n] = Param((E, D, F), ("experts", "fsdp", "tp"))
+    return t
+
+
+def _capacity(cfg: ArchConfig, group_tokens: int) -> int:
+    c = int(-(-cfg.top_k * group_tokens * cfg.capacity_factor // cfg.n_experts))
+    return max(c, 1)
+
+
+def _dispatch_group(cfg: ArchConfig, x: jax.Array, top_w: jax.Array,
+                    top_e: jax.Array, capacity: int):
+    """x: (T, D); top_w/top_e: (T, k).  Returns buffer (E*C, D), slot (T*k,),
+    token (T*k,), weight (T*k,), valid (T*k,)."""
+    T, D = x.shape
+    k, E, C = cfg.top_k, cfg.n_experts, capacity
+    flat_e = top_e.reshape(-1)
+    flat_w = top_w.reshape(-1)
+    token = jnp.arange(T * k) // k
+    order = jnp.argsort(flat_e)
+    s_e, s_tok, s_w = flat_e[order], token[order], flat_w[order]
+    start = jnp.searchsorted(s_e, jnp.arange(E))
+    pos = jnp.arange(T * k) - start[s_e]
+    valid = pos < C
+    slot = jnp.where(valid, s_e * C + pos, E * C)
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].set(x[s_tok])
+    return buf[:E * C], slot, s_tok, s_w, valid
+
+
+def moe_apply(cfg: ArchConfig, p: Dict[str, jax.Array],
+              x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = _capacity(cfg, S)
+
+    x = constrain(x, "batch", "seq", None)
+    logits = (x.astype(jnp.float32) @ p["router"])          # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)
+    top_w = (top_w / jnp.sum(top_w, -1, keepdims=True)).astype(x.dtype)
+    # pin the routing tensors to batch sharding: the vmapped sort/scatter
+    # below must stay shard-local (one group = one sequence = one shard row)
+    top_w = constrain(top_w, "batch", "seq", None)
+    top_e = constrain(top_e, "batch", "seq", None)
+
+    # switch load-balance loss over all tokens
+    frac = jnp.mean(jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32),
+                    axis=(0, 1))
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+
+    # --- dispatch (pure local per group) / expert compute / combine -------
+    # GSPMD cannot partition the argsort+scatter chain (it replicates it and
+    # all-reduces (B,T·k) payloads every layer), so dispatch and combine run
+    # inside shard_map over the batch axes — zero collectives by
+    # construction (no weights cross the boundary); the expert einsums stay
+    # under plain GSPMD so weights keep their EP/FSDP sharding.
+
+    def dispatch(xx, ww, ee):
+        return jax.vmap(
+            lambda a, b, c: _dispatch_group(cfg, a, b, c, C))(xx, ww, ee)
+
+    def combine(y_pad, slot, s_tok, s_w, valid):
+        def one(yp, sl, tk, w, vd):
+            contrib = yp[sl] * (w * vd)[:, None]
+            return jnp.zeros((S, D), x.dtype).at[tk].add(contrib)
+        return jax.vmap(one)(y_pad, slot, s_tok, s_w, valid)
+
+    ctx = current_activation_ctx()
+    smap = None
+    if ctx is not None:
+        mesh, _ = ctx
+        from jax.sharding import AxisType, PartitionSpec as P
+        # when already inside a manual region (e.g. the int8 cross-pod grad
+        # sync shard_maps over "pod"), nest on the ambient abstract mesh and
+        # only map the still-Auto batch axes
+        try:
+            am = jax.sharding.get_abstract_mesh()
+            if am is not None and am.axis_names:
+                mesh = am
+        except Exception:
+            pass
+        types = dict(zip(mesh.axis_names, getattr(
+            mesh, "axis_types", (AxisType.Auto,) * len(mesh.axis_names))))
+        if any(t == AxisType.Manual for t in types.values()):
+            # nested shard_map (e.g. inside the int8 cross-pod sync) trips an
+            # XLA SPMD partitioner CHECK on this backend — fall back to the
+            # plain vmapped dispatch there (documented in EXPERIMENTS.md).
+            batch_axes = ()
+        else:
+            batch_axes = tuple(
+                a for a in ("pod", "data")
+                if a in mesh.axis_names and types[a] != AxisType.Manual)
+        n_shards = math.prod(
+            dict(zip(mesh.axis_names, mesh.axis_sizes))[a]
+            for a in batch_axes) if batch_axes else 1
+        if batch_axes and n_shards > 1 and B % n_shards == 0:
+            def smap(fn, n_in):
+                return jax.shard_map(
+                    fn, mesh=mesh, in_specs=(P(batch_axes),) * n_in,
+                    out_specs=P(batch_axes), axis_names=set(batch_axes),
+                    check_vma=False)
+
+    if smap is not None:
+        buf, slot, s_tok, s_w, valid = smap(dispatch, 3)(x, top_w, top_e)
+    else:
+        buf, slot, s_tok, s_w, valid = dispatch(x, top_w, top_e)
+
+    eb = constrain(buf.reshape(B, E, C, D), "batch", "experts", None, None)
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", eb, p["w_gate"])) \
+            * jnp.einsum("becd,edf->becf", eb, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", eb, p["w_up"]))
+    h = constrain(h, "batch", "experts", None, "tp")
+    y = jnp.einsum("becf,efd->becd", h, p["w_down"]).reshape(B, E * C, D)
+    y = constrain(y, "batch", None, None)
+    y_pad = jnp.concatenate([y, jnp.zeros((B, 1, D), y.dtype)], axis=1)
+
+    if smap is not None:
+        out = smap(combine, 5)(y_pad, slot, s_tok, s_w, valid)
+    else:
+        out = combine(y_pad, slot, s_tok, s_w, valid)
+    return constrain(out, "batch", "seq", None), aux
+
+
+def moe_ref_dense(cfg: ArchConfig, p: Dict[str, jax.Array],
+                  x: jax.Array) -> jax.Array:
+    """Oracle: run EVERY expert on every token, combine by router weights.
+    O(E) compute — only for tests on reduced configs."""
+    B, S, D = x.shape
+    logits = (x.astype(jnp.float32) @ p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, cfg.top_k)
+    top_w = top_w / jnp.sum(top_w, -1, keepdims=True)
+    gate = jnp.zeros_like(probs).at[
+        jnp.arange(B)[:, None, None],
+        jnp.arange(S)[None, :, None],
+        top_e].set(top_w)
+    ys = []
+    for e in range(cfg.n_experts):
+        pe = {n: p[n][e] for n in p if n != "router"}
+        ys.append(mlp_apply(pe, x, cfg.mlp))
+    y = jnp.stack(ys, axis=-2)                              # (B, S, E, D)
+    return jnp.einsum("bse,bsed->bsd", gate.astype(y.dtype), y)

@@ -1,0 +1,342 @@
+"""Selective state-space blocks: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+The GPU reference implementations are hardware-aware CUDA scans; the
+TPU-native adaptation here is a **chunked selective scan**: sequence is split
+into chunks of Q tokens, a ``lax.associative_scan`` runs inside the chunk
+(parallel, MXU/VPU friendly) and a ``lax.scan`` carries the (B, M, N) state
+across chunks (HLO stays O(1) in sequence length).  The chunk body is
+rematerialized so backward never holds more than one chunk of (B,Q,M,N)
+intermediates.  Decode is the exact single-step recurrence (O(1) state —
+this is why the SSM/hybrid archs run the 500k-context shape).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import Param, constrain
+
+
+# ---------------------------------------------------------------------------
+# Shared chunked selective scan
+# ---------------------------------------------------------------------------
+
+
+def _assoc(op_a, op_b):
+    a1, b1 = op_a
+    a2, b2 = op_b
+    return a1 * a2, a2 * b1 + b2
+
+
+def chunked_selective_scan(dA: jax.Array, dBx: jax.Array, h0: jax.Array,
+                           chunk: int = 64) -> Tuple[jax.Array, jax.Array]:
+    """dA, dBx: (B, S, M, N) decay/input terms; h0: (B, M, N).
+    Returns (h_all (B, S, M, N), h_last)."""
+    B, S, M, N = dA.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=1.0)
+        dBx = jnp.pad(dBx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = dA.shape[1] // chunk
+    dA = jnp.moveaxis(dA.reshape(B, nc, chunk, M, N), 1, 0)
+    dBx = jnp.moveaxis(dBx.reshape(B, nc, chunk, M, N), 1, 0)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(h, args):
+        a, b = args                                   # (B, Q, M, N)
+        a = constrain(a, "batch", None, "ssm_inner", None)
+        b = constrain(b, "batch", None, "ssm_inner", None)
+        cum_a, cum_b = jax.lax.associative_scan(_assoc, (a, b), axis=1)
+        h_all = cum_a * h[:, None] + cum_b            # include carry
+        return h_all[:, -1], constrain(h_all, "batch", None, "ssm_inner",
+                                       None)
+
+    h_last, h_chunks = jax.lax.scan(body, h0, (dA, dBx))
+    h_all = jnp.moveaxis(h_chunks, 0, 1).reshape(B, nc * chunk, M, N)
+    return h_all[:, :S], h_last
+
+
+def selective_scan_step(dA, dBx, h):
+    """Single-token recurrence. dA/dBx: (B, M, N)."""
+    return dA * h + dBx
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (width w) + decode cache
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, S, C); w: (C, W) depthwise taps (tap W-1 = current token)."""
+    W = w.shape[-1]
+    out = x * w[:, -1]
+    for i in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[:, -1 - i]
+    return out + b
+
+
+def causal_conv_step(x_t: jax.Array, conv_cache: jax.Array,
+                     w: jax.Array, b: jax.Array):
+    """x_t: (B, C); conv_cache: (B, W-1, C) past inputs (oldest first)."""
+    window = jnp.concatenate([conv_cache, x_t[:, None]], axis=1)  # (B, W, C)
+    out = jnp.einsum("bwc,cw->bc", window, w) + b
+    return out, window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba-7b)
+# ---------------------------------------------------------------------------
+
+
+class SSMCache(NamedTuple):
+    h: jax.Array          # (B, M, N) state
+    conv: jax.Array       # (B, W-1, d_inner) conv history
+
+
+def mamba1_template(cfg: ArchConfig) -> Dict[str, Param]:
+    D, di, N, R, W = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank,
+                      cfg.ssm_conv)
+    return {
+        "in_proj": Param((D, 2 * di), ("fsdp", "tp")),
+        "conv_w": Param((di, W), ("tp", None), init="fan_in", scale=0.5),
+        "conv_b": Param((di,), ("tp",), init="zeros"),
+        "x_proj": Param((di, R + 2 * N), ("tp", None)),
+        "dt_proj": Param((R, di), (None, "tp"), init="small"),
+        "dt_bias": Param((di,), ("tp",), init="ones", dtype=jnp.float32),
+        "A_log": Param((di, N), ("tp", None), init="ones", dtype=jnp.float32),
+        "D_skip": Param((di,), ("tp",), init="ones", dtype=jnp.float32),
+        "out_proj": Param((di, D), ("tp", "fsdp")),
+    }
+
+
+def _mamba1_inputs(cfg: ArchConfig, p, xc):
+    """xc: (..., S, di) post-conv activations -> dt, Bm, Cm."""
+    N, R = cfg.ssm_state, cfg.dt_rank
+    xdbl = xc @ p["x_proj"]
+    dt_r, Bm, Cm = jnp.split(xdbl, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_r @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def mamba1_apply(cfg: ArchConfig, p: Dict[str, jax.Array], x: jax.Array,
+                 *, chunk: int = 64, return_state: bool = False):
+    B, S, D = x.shape
+    di, N, W = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    xz = constrain(x @ p["in_proj"], "batch", "seq", "ssm_inner")
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(causal_conv(x_in, p["conv_w"], p["conv_b"]))
+    dt, Bm, Cm = _mamba1_inputs(cfg, p, xc)
+    A = -jnp.exp(p["A_log"])                                  # (di, N)
+    dA = jnp.exp(dt[..., None] * A)                           # (B,S,di,N)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    h_all, h_last = chunked_selective_scan(dA, dBx, h0, chunk=chunk)
+    y = jnp.einsum("bsmn,bsn->bsm", h_all, Cm)
+    y = (y + p["D_skip"] * xc.astype(jnp.float32)).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    if return_state:
+        conv_tail = jnp.pad(
+            x_in, ((0, 0), (max(W - 1 - S, 0), 0), (0, 0)))[:, -(W - 1):]
+        return out, {"h": h_last, "conv": conv_tail}
+    return out
+
+
+def mamba1_cache_template(cfg: ArchConfig, batch: int) -> Dict[str, Param]:
+    di, N, W = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "h": Param((batch, di, N), ("batch", "ssm_inner", None), init="zeros",
+                   dtype=jnp.float32),
+        "conv": Param((batch, W - 1, di), ("batch", None, "ssm_inner"),
+                      init="zeros"),
+    }
+
+
+def mamba1_step(cfg: ArchConfig, p, x_t: jax.Array,
+                cache: SSMCache) -> Tuple[jax.Array, SSMCache]:
+    """x_t: (B, D) single token."""
+    xz = x_t @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc, conv = causal_conv_step(x_in, cache.conv, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm = _mamba1_inputs(cfg, p, xc)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * Bm[:, None, :]
+    h = selective_scan_step(dA, dBx, cache.h)
+    y = jnp.einsum("bmn,bn->bm", h, Cm)
+    y = (y + p["D_skip"] * xc.astype(jnp.float32)).astype(x_t.dtype)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, SSMCache(h, conv)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD (zamba2): scalar decay per head, state (heads, P, N)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_template(cfg: ArchConfig) -> Dict[str, Param]:
+    D, di, N, W = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    nh = di // cfg.ssm_head_dim
+    return {
+        "in_proj": Param((D, 2 * di + 2 * N + nh), ("fsdp", "tp")),
+        "conv_w": Param((di, W), ("tp", None), init="fan_in", scale=0.5),
+        "conv_b": Param((di,), ("tp",), init="zeros"),
+        "A_log": Param((nh,), (None,), init="ones", dtype=jnp.float32),
+        "dt_bias": Param((nh,), (None,), init="ones", dtype=jnp.float32),
+        "D_skip": Param((nh,), (None,), init="ones", dtype=jnp.float32),
+        "norm_w": Param((di,), ("tp",), init="ones", dtype=jnp.float32),
+        "out_proj": Param((di, D), ("tp", "fsdp")),
+    }
+
+
+def _mamba2_split(cfg: ArchConfig, zxbcdt: jax.Array):
+    di, N = cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    z, x_in, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    return z, x_in, Bm.astype(jnp.float32), Cm.astype(jnp.float32), dt
+
+
+def _gated_rmsnorm(y: jax.Array, z: jax.Array, w: jax.Array,
+                   eps: float) -> jax.Array:
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    scale = jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + eps)
+    return (y * scale * w)
+
+
+def mamba2_apply(cfg: ArchConfig, p: Dict[str, jax.Array], x: jax.Array,
+                 *, chunk: int = 64, return_state: bool = False):
+    B, S, D = x.shape
+    di, N, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    W = cfg.ssm_conv
+    nh = di // P
+    z, x_in, Bm, Cm, dt = _mamba2_split(
+        cfg, constrain(x @ p["in_proj"], "batch", "seq", None))
+    xc = jax.nn.silu(causal_conv(x_in, p["conv_w"], p["conv_b"]))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                     # (nh,)
+    dA = jnp.exp(dt * A)                                         # (B,S,nh)
+    xh = xc.reshape(B, S, nh, P).astype(jnp.float32)
+    # state (B, S, nh*P, N)
+    dBx = ((dt[..., None] * xh).reshape(B, S, di)[..., None]
+           * Bm[:, :, None, :])
+    dA_full = jnp.repeat(dA, P, axis=-1)[..., None] * jnp.ones((N,))
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    h_all, h_last = chunked_selective_scan(dA_full, dBx, h0, chunk=chunk)
+    y = jnp.einsum("bsmn,bsn->bsm", h_all, Cm)                   # (B,S,di)
+    y = y + (jnp.repeat(p["D_skip"], P) * xc.astype(jnp.float32))
+    y = _gated_rmsnorm(y, z, p["norm_w"], cfg.norm_eps).astype(x.dtype)
+    out = y @ p["out_proj"]
+    if return_state:
+        conv_tail = jnp.pad(
+            x_in, ((0, 0), (max(W - 1 - S, 0), 0), (0, 0)))[:, -(W - 1):]
+        return out, {"h": h_last, "conv": conv_tail}
+    return out
+
+
+def mamba2_apply_ssd(cfg: ArchConfig, p: Dict[str, jax.Array],
+                     x: jax.Array, *, chunk: int = 128,
+                     return_state: bool = False):
+    """Mamba-2 via the SSD chunk-matmul form (the paper's own algorithm,
+    TPU-adapted): scalar-per-head decay lets each Q-token chunk be computed
+    as two MXU matmuls (intra-chunk "attention" M·X and inter-chunk state
+    propagation) instead of materializing (B,S,d_inner,N) scan terms.
+
+    HBM traffic per chunk: O(B·Q·(d_inner+N)) inputs + O(B·nh·Q²) score
+    block — the same shape argument as flash attention, and ~60× less than
+    the elementwise scan path for zamba2's (d_inner=4096, N=64).
+    """
+    from repro.distributed.sharding import constrain
+    B, S, D = x.shape
+    di, N, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    W = cfg.ssm_conv
+    nh = di // P
+    z, x_in, Bm, Cm, dt = _mamba2_split(
+        cfg, constrain(x @ p["in_proj"], "batch", "seq", None))
+    xc = jax.nn.silu(causal_conv(x_in, p["conv_w"], p["conv_b"]))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    a_log = dt * -jnp.exp(p["A_log"])                            # <= 0
+    xh = xc.reshape(B, S, nh, P).astype(jnp.float32)
+    dtx = dt[..., None] * xh                                     # (B,S,nh,P)
+
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        z_pad = lambda t: jnp.pad(
+            t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        a_log, Bm, Cm, dtx = map(z_pad, (a_log, Bm, Cm, dtx))
+    nc = a_log.shape[1] // Q
+
+    def to_chunks(t):
+        return jnp.moveaxis(
+            t.reshape((B, nc, Q) + t.shape[2:]), 1, 0)
+
+    a_c, B_c, C_c, dtx_c = map(to_chunks, (a_log, Bm, Cm, dtx))
+    h0 = jnp.zeros((B, nh, P, N), jnp.float32)
+
+    import functools as _ft
+
+    @_ft.partial(jax.checkpoint, prevent_cse=False)
+    def body(h, args):
+        al, Bq, Cq, dx = args          # (B,Q,nh) (B,Q,N) (B,Q,N) (B,Q,nh,P)
+        dx = constrain(dx, "batch", None, "ssm_inner", None)
+        l = jnp.cumsum(al, axis=1)                       # (B,Q,nh)
+        # intra-chunk: masked decay "attention"
+        cb = jnp.einsum("bqn,bsn->bqs", Cq, Bq)          # (B,Q,Q)
+        mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+        diff = l[:, :, None, :] - l[:, None, :, :]       # (B,Q,S,nh)
+        # clamp masked lanes BEFORE exp: exp(+big) in dead lanes would
+        # poison the backward pass with inf * 0 = NaN
+        diff = jnp.where(mask[None, :, :, None], diff, -1e30)
+        m = cb[..., None] * jnp.exp(diff)
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", m, dx)
+        # inter-chunk: incoming state read by C with cumulative decay
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", Cq,
+                             h) * jnp.exp(l)[..., None]
+        # state update
+        l_last = l[:, -1][:, None]                       # (B,1,nh)
+        w = jnp.exp(l_last - l)[..., None] * dx          # (B,Q,nh,P)
+        h_new = (jnp.exp(l[:, -1])[..., None, None] * h
+                 + jnp.einsum("bqhp,bqn->bhpn", w, Bq))
+        return h_new, (y_intra + y_inter)
+
+    h_last, y_chunks = jax.lax.scan(body, h0, (a_c, B_c, C_c, dtx_c))
+    y = jnp.moveaxis(y_chunks, 0, 1).reshape(B, nc * Q, di)[:, :S]
+    y = y + (jnp.repeat(p["D_skip"], P) * xc.astype(jnp.float32))
+    y = _gated_rmsnorm(y, z, p["norm_w"], cfg.norm_eps).astype(x.dtype)
+    out = y @ p["out_proj"]
+    if return_state:
+        conv_tail = jnp.pad(
+            x_in, ((0, 0), (max(W - 1 - S, 0), 0), (0, 0)))[:, -(W - 1):]
+        return out, {"h": h_last.reshape(B, di, N), "conv": conv_tail}
+    return out
+
+
+mamba2_cache_template = mamba1_cache_template
+
+
+def mamba2_step(cfg: ArchConfig, p, x_t: jax.Array,
+                cache: SSMCache) -> Tuple[jax.Array, SSMCache]:
+    di, N, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    nh = di // P
+    z, x_in, Bm, Cm, dt = _mamba2_split(cfg, x_t @ p["in_proj"])
+    xc, conv = causal_conv_step(x_in, cache.conv, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    dA = jnp.exp(dt * -jnp.exp(p["A_log"]))                      # (B,nh)
+    dBx = ((dt[..., None] * xc.reshape(-1, nh, P).astype(jnp.float32))
+           .reshape(-1, di)[..., None] * Bm[:, None, :])
+    dA_full = jnp.repeat(dA, P, axis=-1)[..., None] * jnp.ones((N,))
+    h = selective_scan_step(dA_full, dBx, cache.h)
+    y = jnp.einsum("bmn,bn->bm", h, Cm)
+    y = y + jnp.repeat(p["D_skip"], P) * xc.astype(jnp.float32)
+    y = _gated_rmsnorm(y, z, p["norm_w"], cfg.norm_eps).astype(x_t.dtype)
+    return y @ p["out_proj"], SSMCache(h, conv)

@@ -1,0 +1,319 @@
+"""Decoder blocks + scan-over-layers stacks for all assigned families.
+
+Layer parameters are stacked along a leading L axis and consumed by
+``lax.scan`` so the HLO is O(1) in depth (nemotron's 96 layers compile as one
+loop).  The hybrid (zamba2) family scans groups of SSM blocks and applies a
+single weight-TIED attention block between groups.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import Param, constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (mlp_apply, mlp_template, rmsnorm,
+                                 rmsnorm_template)
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": "everything",   # checkpoint with default policy (save nothing)
+    "dots": "dots",         # save dot products without batch dims
+}
+
+
+def _maybe_remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            prevent_cse=False)
+    return jax.checkpoint(fn, prevent_cse=False)
+
+
+# ---------------------------------------------------------------------------
+# Block templates
+# ---------------------------------------------------------------------------
+
+
+def block_template(cfg: ArchConfig) -> Dict[str, Any]:
+    """Template for ONE layer of the arch's repeated block."""
+    D = cfg.d_model
+    if cfg.has_ssm:        # ssm + hybrid families: pure SSM repeated block
+        tpl = (ssm_mod.mamba1_template if cfg.ssm_variant == "mamba1"
+               else ssm_mod.mamba2_template)
+        return {"ln": rmsnorm_template(D), "ssm": tpl(cfg)}
+    out: Dict[str, Any] = {
+        "ln1": rmsnorm_template(D),
+        "attn": attn.attn_template(cfg),
+        "ln2": rmsnorm_template(D),
+    }
+    out["mlp"] = (moe_mod.moe_template(cfg) if cfg.is_moe
+                  else mlp_template(D, cfg.d_ff, cfg.mlp))
+    return out
+
+
+def shared_attn_template(cfg: ArchConfig) -> Dict[str, Any]:
+    """zamba2's single weight-tied attention(+MLP) block."""
+    D = cfg.d_model
+    return {
+        "ln1": rmsnorm_template(D),
+        "attn": attn.attn_template(cfg),
+        "ln2": rmsnorm_template(D),
+        "mlp": mlp_template(D, cfg.d_ff, cfg.mlp),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Block forwards (no cache)
+# ---------------------------------------------------------------------------
+
+
+def _ssm_fn(cfg: ArchConfig, ssm_algo: str):
+    if cfg.ssm_variant == "mamba1":
+        return ssm_mod.mamba1_apply
+    return (ssm_mod.mamba2_apply_ssd if ssm_algo == "ssd"
+            else ssm_mod.mamba2_apply)
+
+
+def block_apply(cfg: ArchConfig, p, x, positions, *, attn_chunk: int,
+                ssm_chunk: int, ssm_algo: str = "scan"
+                ) -> Tuple[jax.Array, jax.Array]:
+    """One repeated block. Returns (x, aux_loss_increment)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = constrain(x, "batch", "seq", None)
+    if cfg.has_ssm:
+        fn = _ssm_fn(cfg, ssm_algo)
+        x = x + fn(cfg, p["ssm"], rmsnorm(x, p["ln"], cfg.norm_eps),
+                   chunk=ssm_chunk)
+        return constrain(x, "batch", "seq", None), aux
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    x = x + attn.attention_apply(cfg, p["attn"], h, positions,
+                                 chunk=attn_chunk)
+    x = constrain(x, "batch", "seq", None)
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        y, aux = moe_mod.moe_apply(cfg, p["mlp"], h)
+        x = x + y
+    else:
+        x = x + mlp_apply(p["mlp"], h, cfg.mlp)
+    return constrain(x, "batch", "seq", None), aux
+
+
+def shared_attn_apply(cfg: ArchConfig, p, x, positions, *,
+                      attn_chunk: int) -> jax.Array:
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    x = x + attn.attention_apply(cfg, p["attn"], h, positions,
+                                 chunk=attn_chunk)
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp_apply(p["mlp"], h, cfg.mlp)
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+
+def hybrid_groups(cfg: ArchConfig):
+    """Split n_layers SSM blocks into groups; shared attention runs after
+    each full group.  38 layers, attn_every=6 -> [6]*6 + [2]."""
+    k = cfg.attn_every
+    full, rem = divmod(cfg.n_layers, k)
+    return [k] * full + ([rem] if rem else [])
+
+
+def stack_template(cfg: ArchConfig) -> Dict[str, Any]:
+    blk = block_template(cfg)
+    stacked = jax.tree.map(
+        lambda p: p.stack(cfg.n_layers), blk,
+        is_leaf=lambda t: isinstance(t, Param))
+    out = {"layers": stacked}
+    if cfg.family == "hybrid":
+        out["shared_attn"] = shared_attn_template(cfg)
+    return out
+
+
+def stack_apply(cfg: ArchConfig, params, x, positions, *,
+                remat: str = "full", attn_chunk: int = 1024,
+                ssm_chunk: int = 64, ssm_algo: str = "scan"
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Run all layers. Returns (hidden, aux_loss)."""
+    def layer(carry, pl):
+        x, aux = carry
+        x, a = block_apply(cfg, pl, x, positions, attn_chunk=attn_chunk,
+                           ssm_chunk=ssm_chunk, ssm_algo=ssm_algo)
+        return (x, aux + a), None
+
+    layer = _maybe_remat(layer, remat)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.family != "hybrid":
+        (x, aux), _ = jax.lax.scan(layer, (x, aux0), params["layers"])
+        return x, aux
+
+    # hybrid: scan each SSM group, weight-tied attention between groups
+    groups = hybrid_groups(cfg)
+    off = 0
+    aux = aux0
+    shared = _maybe_remat(
+        lambda x: shared_attn_apply(cfg, params["shared_attn"], x, positions,
+                                    attn_chunk=attn_chunk), remat)
+    for g in groups:
+        sl = jax.tree.map(lambda a: a[off:off + g], params["layers"])
+        (x, aux), _ = jax.lax.scan(layer, (x, aux), sl)
+        x = shared(x)
+        off += g
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Cache-carrying stacks (prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def stack_cache_template(cfg: ArchConfig, batch: int,
+                         seq_len: int) -> Dict[str, Any]:
+    if cfg.has_ssm:
+        tpl = ssm_mod.mamba1_cache_template(cfg, batch)
+        stacked = jax.tree.map(lambda p: p.stack(cfg.n_layers), tpl,
+                               is_leaf=lambda t: isinstance(t, Param))
+        out = {"layers": stacked}
+        if cfg.family == "hybrid":
+            # weights are tied but each of the n_groups applications has its
+            # OWN KV cache (distinct activations at each depth).
+            ng = len(hybrid_groups(cfg))
+            out["shared_attn"] = jax.tree.map(
+                lambda p: p.stack(ng), attn.cache_template(cfg, batch, seq_len),
+                is_leaf=lambda t: isinstance(t, Param))
+        return out
+    stacked = jax.tree.map(
+        lambda p: p.stack(cfg.n_layers),
+        attn.cache_template(cfg, batch, seq_len),
+        is_leaf=lambda t: isinstance(t, Param))
+    return {"layers": stacked}
+
+
+def _layer_prefill(cfg: ArchConfig, pl, x, positions, cache_len, attn_chunk,
+                   ssm_chunk, ssm_algo="scan"):
+    """One layer prefill -> (x, layer_cache)."""
+    if cfg.has_ssm:
+        h = rmsnorm(x, pl["ln"], cfg.norm_eps)
+        p = pl["ssm"]
+        fn = _ssm_fn(cfg, ssm_algo)
+        y, cache = fn(cfg, p, h, chunk=ssm_chunk, return_state=True)
+        return x + y, cache
+    h = rmsnorm(x, pl["ln1"], cfg.norm_eps)
+    y, kv = attn.attention_prefill(cfg, pl["attn"], h, positions, cache_len,
+                                   chunk=attn_chunk)
+    x = x + y
+    h = rmsnorm(x, pl["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        y, _ = moe_mod.moe_apply(cfg, pl["mlp"], h)
+        x = x + y
+    else:
+        x = x + mlp_apply(pl["mlp"], h, cfg.mlp)
+    return x, {"k": kv.k, "v": kv.v}
+
+
+def stack_prefill(cfg: ArchConfig, params, x, positions, cache_len, *,
+                  attn_chunk: int = 1024, ssm_chunk: int = 64,
+                  ssm_algo: str = "scan"):
+    """Prefill all layers. Python loop over layers (prefill is once-per-
+    request; scan-with-cache-stacking used in decode where it matters)."""
+    caches = []
+    aux_positions = positions
+
+    if cfg.family != "hybrid":
+        def layer(x, pl):
+            return _layer_prefill(cfg, pl, x, aux_positions, cache_len,
+                                  attn_chunk, ssm_chunk, ssm_algo)
+        x, caches = jax.lax.scan(
+            lambda c, pl: layer(c, pl), x, params["layers"])
+        return x, {"layers": caches}
+
+    groups = hybrid_groups(cfg)
+    off = 0
+    shared_caches = []
+    for gi, g in enumerate(groups):
+        sl = jax.tree.map(lambda a: a[off:off + g], params["layers"])
+        x, c = jax.lax.scan(
+            lambda c, pl: _layer_prefill(cfg, pl, c, aux_positions, cache_len,
+                                         attn_chunk, ssm_chunk, ssm_algo),
+            x, sl)
+        caches.append(c)
+        sp = params["shared_attn"]
+        h = rmsnorm(x, sp["ln1"], cfg.norm_eps)
+        y, kv = attn.attention_prefill(cfg, sp["attn"], h, positions,
+                                       cache_len, chunk=attn_chunk)
+        x = x + y
+        h = rmsnorm(x, sp["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(sp["mlp"], h, cfg.mlp)
+        shared_caches.append({"k": kv.k, "v": kv.v})  # per-application cache
+        off += g
+    merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *caches)
+    shared = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *shared_caches)
+    return x, {"layers": merged, "shared_attn": shared}
+
+
+def stack_decode(cfg: ArchConfig, params, caches, x, positions,
+                 rope_positions=None):
+    """One decode step through all layers. x: (B, 1, D); positions (B,) are
+    linear cache slots; rope_positions optionally carries M-RoPE ids."""
+    def layer(x, args):
+        pl, cl = args
+        if cfg.has_ssm:
+            h = rmsnorm(x, pl["ln"], cfg.norm_eps)
+            step = (ssm_mod.mamba1_step if cfg.ssm_variant == "mamba1"
+                    else ssm_mod.mamba2_step)
+            y, nc = step(cfg, pl["ssm"], h[:, 0],
+                         ssm_mod.SSMCache(cl["h"], cl["conv"]))
+            return x + y[:, None], {"h": nc.h, "conv": nc.conv}
+        h = rmsnorm(x, pl["ln1"], cfg.norm_eps)
+        y, kv = attn.attention_decode(cfg, pl["attn"], h,
+                                      attn.KVCache(cl["k"], cl["v"]),
+                                      positions, rope_positions)
+        x = x + y
+        h = rmsnorm(x, pl["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, _ = moe_mod.moe_apply(cfg, pl["mlp"], h)
+            x = x + y
+        else:
+            x = x + mlp_apply(pl["mlp"], h, cfg.mlp)
+        return x, {"k": kv.k, "v": kv.v}
+
+    if cfg.family != "hybrid":
+        x, new_caches = jax.lax.scan(layer, x,
+                                     (params["layers"], caches["layers"]))
+        return x, {"layers": new_caches}
+
+    groups = hybrid_groups(cfg)
+    off = 0
+    new_layer_caches = []
+    new_shared = []
+    for gi, g in enumerate(groups):
+        sl = jax.tree.map(lambda a: a[off:off + g], params["layers"])
+        cl = jax.tree.map(lambda a: a[off:off + g], caches["layers"])
+        x, nc = jax.lax.scan(layer, x, (sl, cl))
+        new_layer_caches.append(nc)
+        sp = params["shared_attn"]
+        sc = jax.tree.map(lambda a: a[gi], caches["shared_attn"])
+        h = rmsnorm(x, sp["ln1"], cfg.norm_eps)
+        y, kv = attn.attention_decode(cfg, sp["attn"], h,
+                                      attn.KVCache(sc["k"], sc["v"]),
+                                      positions, rope_positions)
+        x = x + y
+        h = rmsnorm(x, sp["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(sp["mlp"], h, cfg.mlp)
+        new_shared.append({"k": kv.k, "v": kv.v})
+        off += g
+    merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                          *new_layer_caches)
+    shared = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_shared)
+    return x, {"layers": merged, "shared_attn": shared}

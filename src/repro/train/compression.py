@@ -1,0 +1,68 @@
+"""int8 gradient compression for the cross-pod (DCN) all-reduce.
+
+Multi-pod layout: params/optimizer FSDP-shard *within* a pod and replicate
+*across* pods, so the per-step cross-pod traffic is exactly one gradient
+all-reduce over the slow DCN links.  ``compressed_psum_mean`` shrinks it 4×
+vs f32 (2× vs bf16): a two-phase symmetric int8 quantized reduction —
+
+    1. per-pod symmetric int8 quantization (per-tensor scale),
+    2. ``all_gather`` of the int8 payload (+f32 scales) over the pod axis,
+    3. local dequantize-and-average.
+
+Why all-gather instead of an int8 all-reduce: summing int8 on the wire
+overflows (XLA would widen to int32 = f32-sized traffic).  An int8
+all-gather moves (n-1)/n·size bytes vs a ring f32 all-reduce's
+2·(n-1)/n·4·size — an **8× wire reduction**, and per-pod scales keep the
+quantization error at ≤ max|g|/254 per element per pod.  Used inside a
+``jax.shard_map`` whose manual axes are {"pod"} — the inner model math stays
+under GSPMD (auto) on data/model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compressed_psum_mean(tree, axis_name: str):
+    """Mean-reduce a pytree over ``axis_name`` with int8 wire format."""
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g):
+        gf = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)) / 127.0, 1e-20)
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        qs = jax.lax.all_gather(q, axis_name)          # int8 on the wire
+        ss = jax.lax.all_gather(scale, axis_name)      # (n,) f32, tiny
+        deq = qs.astype(jnp.float32) * ss.reshape(
+            (-1,) + (1,) * g.ndim)
+        return (jnp.sum(deq, axis=0) / n).astype(g.dtype)
+
+    return jax.tree.map(one, tree)
+
+
+def int16_psum_mean(tree, axis_name: str):
+    """Quantized all-reduce with int16 accumulation — the variant that stays
+    SHARDED under GSPMD (the int8 all-gather is replicated across auto mesh
+    axes by XLA's partitioner at large meshes, inflating it ~400×; the int16
+    psum keeps the per-device shard layout and halves the wire vs f32).
+
+    Exact for <=256 pods (127·256 < 2^15).  Shared scale via pmax."""
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g):
+        gf = g.astype(jnp.float32)
+        scale = jax.lax.pmax(
+            jnp.maximum(jnp.max(jnp.abs(gf)) / 127.0, 1e-20), axis_name)
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int16)
+        s = jax.lax.psum(q, axis_name)
+        return (s.astype(jnp.float32) * scale / n).astype(g.dtype)
+
+    return jax.tree.map(one, tree)
+
+
+def psum_mean(tree, axis_name: str):
+    """Uncompressed reference path."""
+    n = jax.lax.psum(1, axis_name)
+    return jax.tree.map(
+        lambda g: (jax.lax.psum(g.astype(jnp.float32), axis_name) / n
+                   ).astype(g.dtype), tree)

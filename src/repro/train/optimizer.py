@@ -1,0 +1,88 @@
+"""AdamW with bf16 params + f32 moments, global-norm clipping, LR schedules.
+
+Pure pytree implementation (no optax dependency in this container).  Moments
+inherit the parameter sharding (same logical axes), so optimizer state is
+FSDP-sharded exactly like params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Param
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr_peak * step / max(cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr_peak * (0.1 + 0.45 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def opt_template(param_template) -> Dict[str, Any]:
+    """Moment templates mirror param shapes/axes in f32."""
+    def f32(p: Param) -> Param:
+        return dataclasses.replace(p, dtype=jnp.float32, init="zeros")
+    mk = lambda: jax.tree.map(f32, param_template,
+                              is_leaf=lambda x: isinstance(x, Param))
+    return {"mu": mk(), "nu": mk()}
+
+
+def init_opt(params) -> Dict[str, Any]:
+    z = lambda: jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"mu": z(), "nu": z()}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, opt, step
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step. params bf16 (or f32), grads any float, moments f32."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    c1 = 1 - cfg.b1 ** t
+    c2 = 1 - cfg.b2 ** t
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        u = (mu / c1) / (jnp.sqrt(nu / c2) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, opt["mu"], opt["nu"])
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu}, {
+        "grad_norm": gnorm, "lr": lr}

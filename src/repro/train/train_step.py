@@ -1,0 +1,117 @@
+"""The training step: grads (+microbatching) -> cross-pod sync -> AdamW.
+
+``make_train_step`` builds a pure (state, batch) -> (state, metrics) function
+ready for jit with in/out shardings from the template trees.  Options:
+
+- ``microbatches``: gradient accumulation via lax.scan (activation memory
+  ∝ batch/microbatches under remat);
+- ``grad_sync``: "auto"  — GSPMD inserts the cross-pod all-reduce,
+               "int8"  — explicit shard_map over the pod axis with the
+                         compressed all-gather reduction (DCN-aware path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.model import Model
+from repro.train.compression import (compressed_psum_mean,
+                                     int16_psum_mean, psum_mean)
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jax.Array
+
+    @staticmethod
+    def create(params) -> "TrainState":
+        return TrainState(params=params, opt=init_opt(params),
+                          step=jnp.zeros((), jnp.int32))
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], m: int):
+    def r(x):
+        b = x.shape[0]
+        assert b % m == 0, (b, m)
+        return x.reshape((m, b // m) + x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_grad_fn(model: Model, microbatches: int = 1) -> Callable:
+    """(params, batch) -> (grads, metrics); grads in f32."""
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    if microbatches == 1:
+        def grad_fn(params, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            return grads, {"loss": loss, **metrics}
+        return grad_fn
+
+    def grad_fn(params, batch):
+        mbs = _split_microbatches(batch, microbatches)
+
+        def body(acc, mb):
+            g_acc, l_acc = acc
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+            return (g_acc, l_acc + loss), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g, l), _ = jax.lax.scan(body, (g0, 0.0), mbs)
+        inv = 1.0 / microbatches
+        grads = jax.tree.map(lambda x: x * inv, g)
+        return grads, {"loss": l * inv, "ce": l * inv,
+                       "aux": jnp.zeros((), jnp.float32)}
+    return grad_fn
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, *,
+                    microbatches: int = 1,
+                    grad_sync: str = "auto",
+                    mesh: Optional[Mesh] = None) -> Callable:
+    grad_fn = make_grad_fn(model, microbatches)
+
+    if grad_sync != "auto":
+        assert mesh is not None and "pod" in mesh.axis_names, grad_sync
+        sync = {"int8": compressed_psum_mean,
+                "int16": int16_psum_mean}.get(grad_sync, psum_mean)
+
+        def synced_grads(params, batch):
+            grads, metrics = grad_fn(params, batch)
+            grads = sync(grads, "pod")
+            metrics = jax.tree.map(
+                lambda x: jax.lax.pmean(x, "pod"), metrics)
+            return grads, metrics
+
+        # pytree-prefix specs: params replicated over pod, batch split on
+        # pod (dim 0), grads + metrics replicated after the sync.
+        wrapped = jax.shard_map(
+            synced_grads, mesh=mesh,
+            in_specs=(P(), P("pod")),
+            out_specs=(P(), P()),
+            axis_names={"pod"}, check_vma=False)
+    else:
+        wrapped = grad_fn
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        grads, metrics = wrapped(state.params, batch)
+        params, opt, om = adamw_update(opt_cfg, state.params, grads,
+                                       state.opt, state.step)
+        new_state = TrainState(params=params, opt=opt, step=state.step + 1)
+        return new_state, {**metrics, **om}
+
+    return train_step

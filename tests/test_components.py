@@ -1,0 +1,219 @@
+"""Component-level oracles: chunked attention vs naive, chunked selective
+scan vs sequential, MoE dispatch vs dense oracle, optimizer behaviour,
+data-pipeline determinism, loss chunking."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.data.pipeline import DataConfig, PipelineState, host_batch
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import attention_core
+from repro.models.layers import softmax_xent
+from repro.models.model import ModelFlags, build_model
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt, lr_at
+
+
+# ---------------------------------------------------------------------------
+# attention_core vs naive
+# ---------------------------------------------------------------------------
+
+
+def _naive_attention(q, k, v, window=0):
+    B, S, K, G, hd = q.shape
+    qf = q.astype(jnp.float32)
+    s = jnp.einsum("bskgh,btkh->bkgst", qf, k.astype(jnp.float32))
+    s = s * hd ** -0.5
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(S)[None, :]
+    mask = cols <= rows
+    if window > 0:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgst,btkh->bskgh", w,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+@pytest.mark.parametrize("chunk", [7, 16, 64, 100])
+@pytest.mark.parametrize("window", [0, 24])
+def test_chunked_attention_matches_naive(chunk, window, rng):
+    B, S, K, G, hd = 2, 50, 2, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, K, G, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, K, hd)), jnp.float32)
+    got = attention_core(q, k, v, window=window, chunk=chunk)
+    want = _naive_attention(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# chunked selective scan vs sequential recurrence
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), s=st.integers(1, 70),
+       chunk=st.sampled_from([4, 16, 64]))
+def test_chunked_scan_matches_sequential(seed, s, chunk):
+    rng = np.random.default_rng(seed)
+    B, M, N = 2, 3, 4
+    dA = jnp.asarray(rng.random((B, s, M, N)) * 0.9 + 0.05, jnp.float32)
+    dBx = jnp.asarray(rng.standard_normal((B, s, M, N)), jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((B, M, N)), jnp.float32)
+    h_all, h_last = ssm_mod.chunked_selective_scan(dA, dBx, h0, chunk=chunk)
+    h = np.asarray(h0)
+    for t in range(s):
+        h = np.asarray(dA[:, t]) * h + np.asarray(dBx[:, t])
+        np.testing.assert_allclose(np.asarray(h_all[:, t]), h, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_last), h, atol=1e-4)
+
+
+def test_conv_step_matches_batch_conv(rng):
+    B, S, C, W = 2, 10, 6, 4
+    x = jnp.asarray(rng.standard_normal((B, S, C)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((C, W)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((C,)), jnp.float32)
+    full = ssm_mod.causal_conv(x, w, b)
+    cache = jnp.zeros((B, W - 1, C))
+    for t in range(S):
+        out, cache = ssm_mod.causal_conv_step(x[:, t], cache, w, b)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(full[:, t]),
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def _moe_cfg(**kw):
+    return dataclasses.replace(ARCHS["moonshot-v1-16b-a3b"].reduced(), **kw)
+
+
+def test_moe_matches_dense_oracle_without_drops(rng):
+    cfg = _moe_cfg(capacity_factor=16.0)
+    from repro.distributed.sharding import init_tree
+    p = init_tree(moe_mod.moe_template(cfg), jax.random.key(0))
+    x = jnp.asarray(rng.standard_normal((2, 24, cfg.d_model)) * 0.3,
+                    jnp.bfloat16)
+    got, aux = moe_mod.moe_apply(cfg, p, x)
+    want = moe_mod.moe_ref_dense(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=3e-2)
+    assert float(aux) > 0.0
+
+
+def test_moe_capacity_drops_bounded(rng):
+    """With cf=1.0 drops happen but output stays finite and close-ish."""
+    cfg = _moe_cfg(capacity_factor=1.0)
+    from repro.distributed.sharding import init_tree
+    p = init_tree(moe_mod.moe_template(cfg), jax.random.key(0))
+    x = jnp.asarray(rng.standard_normal((2, 32, cfg.d_model)) * 0.3,
+                    jnp.bfloat16)
+    got, _ = moe_mod.moe_apply(cfg, p, x)
+    assert np.all(np.isfinite(np.asarray(got, np.float32)))
+
+
+def test_moe_gradients_flow_to_all_param_kinds(rng):
+    cfg = _moe_cfg(capacity_factor=4.0)
+    from repro.distributed.sharding import init_tree
+    p = init_tree(moe_mod.moe_template(cfg), jax.random.key(0))
+    x = jnp.asarray(rng.standard_normal((1, 16, cfg.d_model)) * 0.3,
+                    jnp.bfloat16)
+
+    def loss(p):
+        y, aux = moe_mod.moe_apply(cfg, p, x)
+        return jnp.sum(jnp.square(y.astype(jnp.float32))) + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    for k, leaf in g.items():
+        assert float(jnp.max(jnp.abs(leaf.astype(jnp.float32)))) > 0, k
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = AdamWConfig(lr_peak=0.1, warmup_steps=5, total_steps=200,
+                      weight_decay=0.0, clip_norm=100.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = init_opt(params)
+    step = jnp.zeros((), jnp.int32)
+    for i in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, opt, m = adamw_update(cfg, params, grads, opt, step)
+        step = step + 1
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_at(cfg, jnp.asarray(s))) for s in range(100)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(1e-3, rel=0.01)
+    assert lrs[-1] < 0.3 * 1e-3
+    assert np.argmax(lrs) == pytest.approx(10, abs=1)
+
+
+def test_grad_clipping_bounds_update():
+    cfg = AdamWConfig(clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    opt = init_opt(params)
+    _, _, m = adamw_update(cfg, params, {"w": jnp.full(4, 1e6)}, opt,
+                           jnp.zeros((), jnp.int32))
+    assert float(m["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_deterministic_and_resumable():
+    cfg = DataConfig(ARCHS["llama3.2-3b"].reduced(), batch=4, seq=32)
+    s0 = PipelineState(1234, 0)
+    s1, b1 = host_batch(cfg, s0)
+    s2, b2 = host_batch(cfg, s1)
+    # restart from checkpointed state reproduces batch 2 exactly
+    _, b2b = host_batch(cfg, PipelineState.from_dict(s1.as_dict()))
+    np.testing.assert_array_equal(b2["tokens"], b2b["tokens"])
+    assert not np.array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_copy_task_structure():
+    cfg = DataConfig(ARCHS["llama3.2-3b"].reduced(), batch=2, seq=33,
+                     task="copy")
+    _, b = host_batch(cfg, PipelineState(7, 0))
+    row = np.concatenate([b["tokens"][0], b["labels"][0][-1:]])  # (34,)
+    half = (len(row) + 1) // 2                                   # 17
+    # second half repeats the first (BOS overwrote slot 0 only)
+    np.testing.assert_array_equal(row[half + 1:], row[1:len(row) - half])
+    assert row[0] == 1
+    # labels are tokens shifted by one
+    np.testing.assert_array_equal(b["tokens"][0][1:], b["labels"][0][:-1])
+
+
+# ---------------------------------------------------------------------------
+# chunked loss == plain loss
+# ---------------------------------------------------------------------------
+
+
+def test_loss_chunk_equals_unchunked(rng):
+    cfg = ARCHS["granite-3-2b"].reduced()
+    m1 = build_model(cfg, ModelFlags(attn_chunk=32, loss_chunk=0))
+    m2 = build_model(cfg, ModelFlags(attn_chunk=32, loss_chunk=13))
+    params = m1.init(jax.random.key(0))
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 40)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 40)), jnp.int32)}
+    l1, _ = m1.loss(params, batch)
+    l2, _ = m2.loss(params, batch)
+    assert float(l1) == pytest.approx(float(l2), rel=1e-3)
