@@ -18,6 +18,7 @@ from __future__ import annotations
 import glob
 import json
 import os
+import sys
 import time
 
 import jax
@@ -33,12 +34,13 @@ def row(name: str, us_per_call: float, derived: str = "") -> None:
 
 
 def timeit(fn, *args, n=20, warmup=3):
+    """Wall time per call, blocking EVERY iteration: jax dispatch is async,
+    so only syncing after the loop would time enqueue cost, not compute."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(n):
-        out = fn(*args)
-    jax.block_until_ready(out)
+        jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / n * 1e6
 
 
@@ -110,14 +112,49 @@ def bench_projection():
 
 
 def bench_placement_scale():
+    """Shortlist engine vs per-job full re-rank: wall time, rank-sweep
+    count, and bit-parity.  N list overridable via PLACEMENT_NS (CI smoke
+    sets a small N); the full-rerank baseline is timed up to 65536.
+    Emits BENCH_placement.json at the repo root for cross-PR tracking."""
     from repro.core.fleet import synthetic_fleet
     from repro.core.scheduler import place_jobs
-    for n in (1024, 16384, 131072):
+    ns = tuple(int(x) for x in
+               os.environ.get("PLACEMENT_NS",
+                              "4096,65536,1048576").split(","))
+    J, d, K = 256, 64, 64
+    artifact = []
+    for n in ns:
         fleet = synthetic_fleet(n, seed=1)
-        demands = jnp.asarray([64] * 16, jnp.int32)
-        fn = jax.jit(lambda f, d: place_jobs(f, d).node)
-        us = timeit(fn, fleet, demands, n=5, warmup=2)
-        row(f"placement_16jobs_n{n}", us, f"nodes={n}")
+        demands = jnp.asarray([d] * J, jnp.int32)
+        sl = jax.jit(lambda f, dd: place_jobs(
+            f, dd, engine="shortlist", shortlist=K))
+        r = jax.block_until_ready(sl(fleet, demands))
+        sweeps = int(r.n_sweeps)
+        us = timeit(sl, fleet, demands, n=3, warmup=1)
+        row(f"placement_shortlist_n{n}", us, f"jobs={J};sweeps={sweeps}")
+        entry = {"n": n, "jobs": J, "demand_chips": d, "shortlist": K,
+                 "engine": {"us_per_call": us, "rank_sweeps": sweeps}}
+        if n <= 65536:
+            fr = jax.jit(lambda f, dd: place_jobs(f, dd, engine="full"))
+            rf = jax.block_until_ready(fr(fleet, demands))
+            us_f = timeit(fr, fleet, demands, n=3, warmup=1)
+            parity = bool((r.node == rf.node).all())
+            row(f"placement_full_rerank_n{n}", us_f,
+                f"jobs={J};sweeps={int(rf.n_sweeps)}")
+            row(f"placement_sweep_reduction_n{n}", 0.0,
+                f"{int(rf.n_sweeps) / max(sweeps, 1):.1f}x;parity={parity}")
+            entry["full_rerank"] = {"us_per_call": us_f,
+                                    "rank_sweeps": int(rf.n_sweeps),
+                                    "parity": parity}
+            if not parity:      # the CI smoke gates on this
+                raise SystemExit(
+                    f"placement parity broken at n={n}: shortlist != "
+                    f"full re-rank")
+        artifact.append(entry)
+    out = os.path.join(os.path.dirname(__file__), "..",
+                       "BENCH_placement.json")
+    with open(out, "w") as f:
+        json.dump(artifact, f, indent=2)
 
 
 def bench_train_step_smoke():
@@ -179,16 +216,29 @@ def bench_roofline_report():
         row("dryrun_worst_fraction", 0.0, f"{worst[0]}={worst[1]:.5f}")
 
 
+BENCHES = {
+    "scenario_emissions": bench_scenario_emissions,
+    "projection": bench_projection,
+    "forecast_skill": bench_forecast_skill,
+    "ranking_throughput": bench_ranking_throughput,
+    "placement_scale": bench_placement_scale,
+    "train_step_smoke": bench_train_step_smoke,
+    "decode_step_smoke": bench_decode_step_smoke,
+    "roofline_report": bench_roofline_report,
+}
+
+
 def main() -> None:
+    """Run all benches, or only those named on the command line
+    (e.g. ``python benchmarks/run.py placement_scale``)."""
+    names = sys.argv[1:] or list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        raise SystemExit(f"unknown bench(es) {unknown}; "
+                         f"choose from {list(BENCHES)}")
     print("name,us_per_call,derived")
-    bench_scenario_emissions()
-    bench_projection()
-    bench_forecast_skill()
-    bench_ranking_throughput()
-    bench_placement_scale()
-    bench_train_step_smoke()
-    bench_decode_step_smoke()
-    bench_roofline_report()
+    for n in names:
+        BENCHES[n]()
 
 
 if __name__ == "__main__":

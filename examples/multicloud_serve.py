@@ -3,8 +3,10 @@ greenest region's replica (paper §2: 'interconnect with hybrid approaches
 such as multicloud').
 
 Three serving replicas (ES/NL/DE) share weights; each batch of requests is
-routed by MAIZ_RANKING over live CI×PUE; gCO2/request is compared against
-round-robin routing.
+routed by the fused shortlist placement engine (``repro.core.placement``)
+over a live 3-node Fleet — the same O(N + J·K) path that schedules
+million-node fleets — and gCO2/request is compared against round-robin
+routing.
 
 Run:  PYTHONPATH=src python examples/multicloud_serve.py
 """
@@ -15,7 +17,8 @@ import numpy as np
 from repro.configs import ARCHS
 from repro.core import telemetry
 from repro.core.carbon import carbon_footprint
-from repro.core.ranking import RankWeights, maiz_ranking
+from repro.core.fleet import Fleet
+from repro.core.scheduler import place_jobs
 from repro.models.model import ModelFlags, build_model
 from repro.serve.engine import ServeEngine
 
@@ -34,12 +37,28 @@ params = model.init(jax.random.key(0))
 engines = {r: ServeEngine(model, params, max_seq=64, batch_slots=BATCH_SLOTS)
            for r in REGIONS}
 
+def region_fleet(hour: int) -> Fleet:
+    """The 3 serving replicas as a schedulable Fleet at ``hour``."""
+    ones = jnp.ones((3,), jnp.float32)
+    return Fleet(
+        ci_now=jnp.asarray([ci[r][hour] for r in REGIONS], jnp.float32),
+        ci_forecast=jnp.asarray([ci[r][hour + 1] for r in REGIONS],
+                                jnp.float32),
+        pue=jnp.asarray([pue[r] for r in REGIONS], jnp.float32),
+        power_kw=ones, capacity=jnp.full((3,), BATCH_SLOTS, jnp.int32),
+        healthy=jnp.ones((3,), bool), straggler_score=jnp.zeros_like(ones),
+        flops_per_j=ones,
+        chips_total=jnp.full((3,), BATCH_SLOTS, jnp.int32))
+
+
 rng = np.random.default_rng(0)
 g_aware = g_rr = 0.0
+total_sweeps = 0
 for b in range(N_BATCHES):
-    cfp = jnp.asarray([ci[r][b] * pue[r] for r in REGIONS])
-    scores = maiz_ranking(cfp, cfp, jnp.ones(3), jnp.zeros(3), RankWeights())
-    aware = REGIONS[int(jnp.argmin(scores))]
+    pl = place_jobs(region_fleet(b), jnp.asarray([BATCH_SLOTS], jnp.int32),
+                    engine="shortlist", shortlist=2)
+    aware = REGIONS[int(pl.node[0])]
+    total_sweeps += int(pl.n_sweeps)
     rr = REGIONS[b % 3]
 
     prompts = rng.integers(2, cfg.vocab, (BATCH_SLOTS, 8)).astype(np.int32)
@@ -55,4 +74,5 @@ for b in range(N_BATCHES):
 n_req = N_BATCHES * BATCH_SLOTS
 print(f"\ncarbon-aware: {g_aware / n_req:.2f} gCO2/request | "
       f"round-robin: {g_rr / n_req:.2f} gCO2/request | "
-      f"saving {100 * (1 - g_aware / g_rr):.1f}%")
+      f"saving {100 * (1 - g_aware / g_rr):.1f}% | "
+      f"{total_sweeps} rank sweeps for {N_BATCHES} routing decisions")

@@ -7,6 +7,8 @@ from repro.core.carbon import carbon_footprint, emissions_g, job_energy_kwh, cp_
 from repro.core.forecast import fit_forecast, forecast_regions, forecast_skill  # noqa: F401
 from repro.core.ranking import RankWeights, maiz_ranking, rank_nodes  # noqa: F401
 from repro.core.fleet import Fleet, synthetic_fleet  # noqa: F401
+from repro.core.placement import (PlacementResult, place_jobs_full_rerank,  # noqa: F401
+                                  place_jobs_shortlist)
 from repro.core.scheduler import SCENARIOS, place_jobs, Placement  # noqa: F401
 from repro.core.scenarios import run_paper_experiment, ScenarioResult  # noqa: F401
 from repro.core.cpp import eu_taxonomy_projection, cpp_score, Projection  # noqa: F401

@@ -1,0 +1,278 @@
+"""Fused top-k shortlist placement: O(N + J·K) instead of O(J·N).
+
+``place_jobs`` used to re-rank the full fleet once per job inside a
+``fori_loop`` — a per-job O(N) sweep even though landing a job changes the
+score of exactly one node.  This engine ranks once per *decision epoch*
+instead:
+
+1. **Frozen normalizers.**  A placement call computes the min-max lo/hi per
+   Eq. 1 term once at entry and freezes them (normalization is calibration,
+   not a per-evaluation statistic).  With frozen lo/hi, a node's score
+   depends only on its OWN free capacity — power rises affinely with
+   occupied chips (``Fleet.effective_power_kw``) — so placing a job changes
+   exactly one score, recomputable in O(1).
+
+2. **Shortlist + exactness bound.**  One O(N) sweep (the fused Pallas
+   two-sweep kernel on TPU, stable-sorted jnp scores otherwise) yields the
+   K-node shortlist plus the (K+1)-th best (score, index) pair — the
+   *bound*.  Non-shortlist scores cannot change inside an epoch (only nodes
+   that receive jobs change, and jobs only land on shortlist nodes), so as
+   long as the shortlist's best capacity-feasible (score, index) beats the
+   bound lexicographically, it IS the global argmin and the O(K) pick is
+   exact.
+
+3. **Fallback sweeps.**  When the bound is violated — shortlist capacity
+   exhausted for this demand, or every surviving entry outscored by the
+   bound — the engine runs a fresh full sweep, places the current job from
+   the full masked argmin (exact by construction) and opens the next epoch.
+   Placing J jobs therefore costs a handful of O(N) sweeps plus O(J·K)
+   shortlist work, not J sweeps.
+
+``place_jobs_full_rerank`` is the O(J·N) oracle: per job, rescore the whole
+fleet from current occupancy and take the masked argmin.  Bit-identical
+placements are *guaranteed*, not just likely: every tie-break in the engine
+(stable sort, ``lax.top_k``, in-shortlist argmin) resolves toward the lower
+node index — the same rule as ``jnp.argmin`` — and the per-evaluation score
+math is division-free elementwise mul/add with ``optimization_barrier`` at
+every spot XLA could FMA-contract, so the O(1) single-node rescore computes
+the exact same float32 as the O(N) sweep.  (XLA:CPU's vectorized f32 divide
+is NOT bit-equal to its scalar divide, and contraction choices vary with
+array shape — all reciprocals and cap-independent terms are therefore
+precomputed once per call and shared by both paths.)  The parity tests in
+``tests/test_placement.py`` assert exact equality, ties and ragged shapes
+included.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fleet import IDLE_POWER_FRAC, Fleet
+from repro.core.ranking import RankWeights
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PlacementResult:
+    node: jax.Array       # (J,) int32 chosen node per job; -1 = unplaceable
+    scores: jax.Array     # (N,) scores at FINAL occupancy (frozen lo/hi)
+    capacity: jax.Array   # (N,) free chips after all placements
+    n_sweeps: jax.Array   # () int32: full O(N) decision sweeps performed
+
+
+def _lo_rcp(t):
+    """(lo, 1/span) normalizer pair; degenerate span (<= 1e-12) -> rcp 0 so
+    an information-free term contributes exactly 0 (see ranking._minmax)."""
+    lo, hi = t.min(), t.max()
+    span = hi - lo
+    rcp = jnp.where(span > 1e-12, 1.0 / jnp.maximum(span, 1e-12), 0.0)
+    return lo, rcp, hi
+
+
+def frozen_ctx(fleet: Fleet, weights: RankWeights = RankWeights(),
+               horizon_h: float = 1.0) -> Dict[str, jax.Array]:
+    """One-time per-placement context: cap-independent Eq. 1 pieces.
+
+    ``a_now``/``a_fc`` are full-load CFP/FCFP rates (power·pue·ci·h); the
+    efficiency and schedule terms don't depend on occupancy at all, so their
+    weighted normalized sum collapses into the per-node ``static`` vector.
+    All divisions happen here, once — the per-evaluation path is
+    division-free (see module docstring).  ``lohi`` is the (4, 2) matrix the
+    fused Pallas kernel consumes for the same normalization."""
+    pk = fleet.power_kw * horizon_h
+    a_now = pk * fleet.pue * fleet.ci_now
+    a_fc = pk * fleet.pue * fleet.ci_forecast
+    inv_total = 1.0 / jnp.maximum(fleet.chips_total.astype(jnp.float32), 1.0)
+    eff = fleet.flops_per_j
+    sched = fleet.sched_term
+
+    def mm(x):
+        lo, rcp, _ = _lo_rcp(x)
+        return (x - lo) * rcp
+
+    static = (weights.w3 * (1.0 - mm(eff)) + weights.w4 * mm(sched))
+
+    cap0 = fleet.capacity.astype(jnp.float32)
+    factor0 = (IDLE_POWER_FRAC
+               + (1.0 - IDLE_POWER_FRAC) * (1.0 - cap0 * inv_total))
+    cfp0, fcfp0 = a_now * factor0, a_fc * factor0
+    lo_now, rcp_now, hi_now = _lo_rcp(cfp0)
+    lo_fc, rcp_fc, hi_fc = _lo_rcp(fcfp0)
+    lohi = jnp.stack([
+        jnp.stack([lo_now, hi_now]), jnp.stack([lo_fc, hi_fc]),
+        jnp.stack([eff.min(), eff.max()]),
+        jnp.stack([sched.min(), sched.max()])])
+    return dict(a_now=a_now, a_fc=a_fc, inv_total=inv_total, static=static,
+                lo_now=lo_now, rcp_now=rcp_now, lo_fc=lo_fc, rcp_fc=rcp_fc,
+                lohi=lohi)
+
+
+_GATHERED = ("a_now", "a_fc", "inv_total", "static")
+
+
+def _ctx_scores(cap, ctx, w: RankWeights):
+    """Eq. 1 with frozen normalizers, elementwise over ``cap``'s shape.
+
+    Division-free; the barriers pin rounding before every mul→add seam so a
+    length-1 gather computes bit-identically to the full-fleet sweep."""
+    bar = jax.lax.optimization_barrier
+    occ = 1.0 - bar(cap.astype(jnp.float32) * ctx["inv_total"])
+    dyn = bar((1.0 - IDLE_POWER_FRAC) * occ)
+    factor = IDLE_POWER_FRAC + dyn
+    cfp = bar(ctx["a_now"] * factor)
+    fcfp = bar(ctx["a_fc"] * factor)
+    t1 = bar(w.w1 * ((cfp - ctx["lo_now"]) * ctx["rcp_now"]))
+    t2 = bar(w.w2 * ((fcfp - ctx["lo_fc"]) * ctx["rcp_fc"]))
+    return (t1 + t2) + ctx["static"]
+
+
+def _one_score(cap_b, b, ctx, w: RankWeights):
+    """Rescore node ``b`` (free chips ``cap_b``) in O(1) — bit-identical to
+    ``_ctx_scores(cap)[b]`` with ``cap[b] == cap_b`` (same elementwise
+    graph; see module docstring)."""
+    g = {k: (v[b][None] if k in _GATHERED else v) for k, v in ctx.items()}
+    return _ctx_scores(cap_b[None], g, w)[0]
+
+
+def place_jobs_full_rerank(fleet: Fleet, demands: jax.Array,
+                           weights: RankWeights = RankWeights(),
+                           horizon_h: float = 1.0) -> PlacementResult:
+    """O(J·N) oracle: full fleet rescore + masked argmin per job."""
+    J = demands.shape[0]
+    ctx = frozen_ctx(fleet, weights, horizon_h)
+
+    def body(j, state):
+        cap, nodes = state
+        d = demands[j]
+        scores = _ctx_scores(cap, ctx, weights)
+        masked = jnp.where(cap >= d, scores, jnp.inf)
+        best = jnp.argmin(masked).astype(jnp.int32)
+        ok = jnp.isfinite(masked[best])
+        cap = cap.at[best].add(jnp.where(ok, -d, 0))
+        nodes = nodes.at[j].set(jnp.where(ok, best, -1))
+        return cap, nodes
+
+    init = (fleet.capacity, jnp.full((J,), -1, jnp.int32))
+    cap, nodes = jax.lax.fori_loop(0, J, body, init)
+    return PlacementResult(node=nodes,
+                           scores=_ctx_scores(cap, ctx, weights),
+                           capacity=cap,
+                           n_sweeps=jnp.asarray(J, jnp.int32))
+
+
+def place_jobs_shortlist(fleet: Fleet, demands: jax.Array,
+                         weights: RankWeights = RankWeights(),
+                         horizon_h: float = 1.0, *,
+                         shortlist: int = 32,
+                         use_kernel: bool = False,
+                         interpret: Optional[bool] = None
+                         ) -> PlacementResult:
+    """Shortlist-greedy placement, bit-identical to the O(J·N) oracle.
+
+    ``shortlist`` (static) is K, the epoch shortlist size; ``use_kernel``
+    routes the epoch sweeps through the fused Pallas two-sweep kernel
+    (``repro.kernels.ops.maiz_ranking_topk``) — the TPU fleet-scale path.
+    Kernel scores agree with the jnp path to float32 tolerance (not bitwise;
+    exact-parity guarantees are for the default jnp scoring)."""
+    N, J = fleet.n, demands.shape[0]
+    K = min(max(shortlist, 1), N)
+    full_cover = K >= N          # shortlist == whole fleet: bound unused
+    INF = jnp.float32(jnp.inf)
+    ctx = frozen_ctx(fleet, weights, horizon_h)
+
+    # One epoch sweep = scores + the top-(K+1) candidate list in (score,
+    # node index) lexicographic order: the kernel path gets it from the
+    # tile-merged top-k directly; the jnp path from lax.top_k, whose
+    # lower-index-first tie rule matches argmin/stable-sort (the kernel
+    # merge relies on the same property).
+    k_cand = min(K + 1, N)
+    if use_kernel:
+        from repro.kernels.ops import maiz_ranking_topk
+
+        def sweep_topk(cap):
+            energy = fleet.effective_power_kw(cap) * horizon_h
+            return maiz_ranking_topk(
+                energy, fleet.pue, fleet.ci_now, fleet.ci_forecast,
+                fleet.flops_per_j, fleet.sched_term, weights.as_array(),
+                k=k_cand, lohi=ctx["lohi"], interpret=interpret)
+    else:
+        def sweep_topk(cap):
+            scores = _ctx_scores(cap, ctx, weights)
+            neg, idx = jax.lax.top_k(-scores, k_cand)
+            return scores, -neg, idx.astype(jnp.int32)
+
+    def split_shortlist(cand_s, cand_i):
+        if full_cover:
+            return cand_s[:K], cand_i[:K], INF, jnp.int32(N)
+        return cand_s[:K], cand_i[:K], cand_s[K], cand_i[K]
+
+    def body(j, state):
+        cap, nodes, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps = state
+        d = demands[j]
+
+        # best capacity-feasible shortlist entry by (score, node index)
+        sm = jnp.where(cap[sl_i] >= d, sl_s, INF)
+        m = jnp.min(sm)
+        kbest = jnp.argmin(jnp.where(sm == m, sl_i, jnp.int32(N)))
+        bnode = sl_i[kbest]
+        feasible = jnp.isfinite(m)
+        beats = (m < bound_s) | ((m == bound_s) & (bnode < bound_i))
+        use_sl = feasible & beats
+        # truly unplaceable without a sweep: the demand exceeds every free
+        # capacity (cap_max is a sound upper bound — capacity only shrinks
+        # after the sweep that measured it), or the shortlist covers the
+        # whole fleet and nothing fits
+        dead = (d > cap_max) | ((~feasible) & (~jnp.isfinite(bound_s)))
+
+        # cond branches read the (N,) capacity but return only scalars and
+        # (K,)-sized shortlist state — the lone (N,) write (the capacity
+        # scatter) happens once below, where the loop updates it in place.
+        def from_shortlist(op):
+            cap, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps = op
+            new_s = _one_score(cap[bnode] - d, bnode, ctx, weights)
+            return (bnode, jnp.bool_(True), sl_s.at[kbest].set(new_s), sl_i,
+                    bound_s, bound_i, cap_max, sweeps)
+
+        def from_sweep(op):
+            """Fresh O(N) sweep: place job j exactly, open a new epoch.
+
+            The shortlist/bound come from the sweep's pre-placement top-k;
+            the landed node's entry is patched in place (scores only rise,
+            so the stale bound stays a sound lower bound on non-shortlist
+            scores — see module docstring)."""
+            cap, _, _, _, _, _, sweeps = op
+            scores, cand_s, cand_i = sweep_topk(cap)
+            masked = jnp.where(cap >= d, scores, INF)
+            best = jnp.argmin(masked).astype(jnp.int32)
+            ok = jnp.isfinite(masked[best])
+            new_s = _one_score(cap[best] - d, best, ctx, weights)
+            sl_s, sl_i, bound_s, bound_i = split_shortlist(cand_s, cand_i)
+            sl_s = jnp.where(ok & (sl_i == best), new_s, sl_s)
+            return (best, ok, sl_s, sl_i, bound_s, bound_i,
+                    jnp.max(cap), sweeps + 1)
+
+        def unplaceable(op):
+            cap, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps = op
+            return (jnp.int32(0), jnp.bool_(False), sl_s, sl_i,
+                    bound_s, bound_i, cap_max, sweeps)
+
+        chosen, ok, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps = \
+            jax.lax.cond(
+                use_sl, from_shortlist,
+                lambda op: jax.lax.cond(dead, unplaceable, from_sweep, op),
+                (cap, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps))
+        cap = cap.at[chosen].add(jnp.where(ok, -d, 0))
+        nodes = nodes.at[j].set(jnp.where(ok, chosen, -1))
+        return cap, nodes, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps
+
+    _, cand_s0, cand_i0 = sweep_topk(fleet.capacity)
+    sl_s0, sl_i0, bound_s0, bound_i0 = split_shortlist(cand_s0, cand_i0)
+    state = (fleet.capacity, jnp.full((J,), -1, jnp.int32), sl_s0, sl_i0,
+             bound_s0, bound_i0, jnp.max(fleet.capacity), jnp.int32(1))
+    cap, nodes, _, _, _, _, _, sweeps = jax.lax.fori_loop(0, J, body, state)
+    return PlacementResult(node=nodes,
+                           scores=_ctx_scores(cap, ctx, weights),
+                           capacity=cap, n_sweeps=sweeps)

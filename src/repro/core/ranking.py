@@ -35,9 +35,14 @@ class RankWeights:
 
 
 def _minmax(x: jax.Array, axis=-1) -> jax.Array:
+    """Min-max normalize; a degenerate term (span <= 1e-12) carries no
+    ranking information and contributes exactly 0 — dividing by a clamped
+    span would instead amplify float noise by ~1e12."""
     lo = jnp.min(x, axis=axis, keepdims=True)
     hi = jnp.max(x, axis=axis, keepdims=True)
-    return (x - lo) / jnp.maximum(hi - lo, 1e-12)
+    span = hi - lo
+    rcp = jnp.where(span > 1e-12, 1.0 / jnp.maximum(span, 1e-12), 0.0)
+    return (x - lo) * rcp
 
 
 def maiz_ranking(cfp: jax.Array, fcfp: jax.Array, cp_ratio: jax.Array,

@@ -9,20 +9,22 @@ Two levels, matching the paper:
 
 2. **Fleet placement** (our 1000+-node generalization): jobs with chip
    demands are greedily assigned to the best MAIZ-ranked node with free
-   capacity — a jit-compiled ``lax.fori_loop`` so a million-node fleet ranks
-   and places entirely on-device.
+   capacity, entirely on-device.  The heavy lifting lives in
+   ``repro.core.placement``: a fused top-k shortlist engine that ranks once
+   per decision epoch (O(N + J·K)) instead of once per job (O(J·N)), with
+   the full re-rank path kept as the bit-exact test oracle.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.core import placement
 from repro.core.fleet import Fleet
-from repro.core.ranking import RankWeights, maiz_ranking
+from repro.core.ranking import RankWeights
 
 # ---------------------------------------------------------------------------
 # Paper scenarios (hourly allocation over N nodes)
@@ -87,40 +89,48 @@ SCENARIOS = {
 # ---------------------------------------------------------------------------
 
 
+@jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class Placement:
     node: jax.Array      # (J,) chosen node per job, -1 = unplaceable
-    scores: jax.Array    # (N,) final rank scores (last evaluation)
+    scores: jax.Array    # (N,) rank scores at FINAL occupancy (frozen lo/hi)
+    n_sweeps: Optional[jax.Array] = None   # () int32 full rank sweeps
 
 
 def place_jobs(fleet: Fleet, demands: jax.Array,
                weights: RankWeights = RankWeights(),
-               horizon_h: float = 1.0) -> Placement:
+               horizon_h: float = 1.0, *,
+               engine: str = "shortlist", shortlist: int = 32,
+               use_kernel: bool = False) -> Placement:
     """Greedy: jobs in given order take the best-ranked node with capacity.
 
-    demands: (J,) chips per job.  Capacity is decremented as jobs land, so
-    later jobs see the updated fleet.  O(J·N) on-device; ranking is
-    re-evaluated per job because CFP depends on what already landed.
+    demands: (J,) chips per job.  Capacity is decremented as jobs land and
+    node power — hence CFP/FCFP — rises with occupancy
+    (``Fleet.effective_power_kw``), so later jobs genuinely see the updated
+    fleet.  Because a landing job perturbs exactly one node's score, the
+    default ``engine="shortlist"`` ranks once per decision epoch against a
+    tile-merged top-``shortlist`` and places in O(N + J·K);
+    ``engine="full"`` is the O(J·N) per-job re-rank oracle the shortlist
+    path is bit-identical to (see ``repro.core.placement``).
+    ``use_kernel`` routes epoch sweeps through the fused Pallas kernel.
+
+    The win is measured in rank sweeps (the memory-bound quantity on TPU:
+    5 vs 256 at N=65536, J=256 — see BENCH_placement.json).  On CPU with
+    the jnp scoring path and large J, per-job loop overhead can exceed the
+    sweep savings; ``engine="full"`` remains available for that regime.
     """
-    scores0 = fleet.rank(horizon_h=horizon_h, weights=weights)
-
-    def body(j, state):
-        cap, nodes = state
-        d = demands[j]
-        scores = fleet.rank(horizon_h=horizon_h, weights=weights,
-                            demand_chips=d)
-        scores = jnp.where(cap >= d, scores, jnp.inf)
-        best = jnp.argmin(scores)
-        ok = jnp.isfinite(scores[best])
-        cap = cap.at[best].add(jnp.where(ok, -d, 0))
-        nodes = nodes.at[j].set(jnp.where(ok, best, -1))
-        return cap, nodes
-
-    J = demands.shape[0]
-    cap0 = fleet.capacity
-    nodes0 = jnp.full((J,), -1, jnp.int32)
-    cap, nodes = jax.lax.fori_loop(0, J, body, (cap0, nodes0))
-    return Placement(node=nodes, scores=scores0)
+    if engine == "shortlist":
+        r = placement.place_jobs_shortlist(
+            fleet, demands, weights, horizon_h, shortlist=shortlist,
+            use_kernel=use_kernel)
+    elif engine == "full":
+        r = placement.place_jobs_full_rerank(fleet, demands, weights,
+                                             horizon_h)
+    else:
+        raise ValueError(f"unknown placement engine: {engine!r}")
+    return Placement(node=r.node, scores=r.scores, n_sweeps=r.n_sweeps)
 
 
-place_jobs_jit = jax.jit(place_jobs, static_argnames=())
+place_jobs_jit = jax.jit(place_jobs,
+                         static_argnames=("engine", "shortlist",
+                                          "use_kernel"))

@@ -1,19 +1,37 @@
-"""Pallas TPU kernel: fused fleet-scale MAIZ_RANKING (Eq. 2 + Eq. 1 + argmin).
+"""Pallas TPU kernels: fused fleet-scale MAIZ_RANKING (Eq. 2 + Eq. 1 + top-k).
 
 The paper ranks 3 nodes in a Python loop; at 10^5..10^6 schedulable nodes the
-scoring pass is a memory-streaming problem, so the TPU adaptation fuses, per
-(8, 128) VMEM tile of the node axis:
+scoring pass is a memory-streaming problem.  The TPU adaptation is two
+memory-bound sweeps over the node axis, each touching every input stream
+exactly once:
+
+sweep 1 (``_lohi_kernel``)  — per (8, 128) VMEM tile, compute the four Eq. 1
+    terms and reduce their tile-local (lo, hi); the host folds the per-tile
+    partials into the global (4, 2) min-max normalizers.  (Previously this
+    pre-pass materialized a stacked (4, N) term array in HBM — a third sweep.)
+
+sweep 2 (``_topk_kernel``) — per tile:
 
     cf   = ec · pue · ci_now          (Eq. 2, current)
     fcf  = ec · pue · ci_fc           (Eq. 2, forecast)
     score = w1·n(cf) + w2·n(fcf) + w3·(1 − n(eff)) + w4·n(sched)   (Eq. 1)
-    tile-local (min, argmin)          (reduction for the placement pick)
+    tile-local top-k (scores + global indices) by iterative min-extraction
 
-where n(·) is min-max normalization with precomputed lo/hi (a cheap O(N)
-pre-pass — the fused kernel is the bandwidth-bound part: 6 input streams,
-1 output stream, one read each).  ``repro.kernels.ref.maiz_ranking_ref`` is
-the pure-jnp oracle; ``repro.core.ranking.maiz_ranking`` is the
-paper-faithful module implementation both are tested against.
+where n(·) is min-max normalization with the sweep-1 lo/hi.  The tile top-k's
+are merged on the host by one ``lax.top_k`` over nt·k candidates, giving the
+exact global shortlist the placement engine (``repro.core.placement``)
+consumes.  Ties break toward the lower node index at every stage (extraction
+order within a tile, tile order across tiles, ``lax.top_k`` stability), so
+the merged shortlist is the lexicographic (score, index) head — identical to
+``jnp.argmin`` / stable-sort semantics.
+
+Padding: arrays are padded up to the 1024-node tile; a scalar ``n_valid``
+masks padded lanes out of both the lo/hi reduction and the score output
+(padded scores are +inf, so they can never enter a shortlist).
+
+``repro.kernels.ref.maiz_ranking_ref`` is the pure-jnp oracle;
+``repro.core.ranking.maiz_ranking`` is the paper-faithful module
+implementation both are tested against.
 """
 from __future__ import annotations
 
@@ -26,11 +44,22 @@ from jax.experimental import pallas as pl
 LANES = 128
 SUBLANES = 8
 TILE = LANES * SUBLANES
+# the per-tile top-k is an UNROLLED min-extraction (O(k·TILE) work and k
+# unrolled ops to compile), so tile-local k is capped; larger shortlists
+# are merged host-side from the full score vector (see ops.maiz_ranking_topk)
+MAX_TILE_K = 64
+_BIG = 3e38        # finite sentinel for masked min/max (below f32 max)
 
 
-def _rank_kernel(ec_ref, pue_ref, ci_ref, fc_ref, eff_ref, sw_ref,
-                 lohi_ref, w_ref, score_ref, tmin_ref, targ_ref):
-    ti = pl.program_id(0)
+def _flat_ids():
+    """Tile-local flat node ids, TPU-safe (2D iota)."""
+    row = jax.lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 1)
+    return row * LANES + col
+
+
+def _tile_terms(ec_ref, pue_ref, ci_ref, fc_ref, eff_ref, sw_ref):
+    """The four Eq. 1 terms for one (8, 128) node tile."""
     ec = ec_ref[...].astype(jnp.float32)
     pue = pue_ref[...].astype(jnp.float32)
     base = ec * pue
@@ -38,54 +67,111 @@ def _rank_kernel(ec_ref, pue_ref, ci_ref, fc_ref, eff_ref, sw_ref,
     fcf = base * fc_ref[...].astype(jnp.float32)
     eff = eff_ref[...].astype(jnp.float32)
     sw = sw_ref[...].astype(jnp.float32)
+    return cf, fcf, eff, sw
 
+
+def _lohi_kernel(n_ref, ec_ref, pue_ref, ci_ref, fc_ref, eff_ref, sw_ref,
+                 lo_ref, hi_ref):
+    ti = pl.program_id(0)
+    valid = _flat_ids() + ti * TILE < n_ref[0, 0]
+    terms = _tile_terms(ec_ref, pue_ref, ci_ref, fc_ref, eff_ref, sw_ref)
+    for i, t in enumerate(terms):
+        lo_ref[0, i] = jnp.min(jnp.where(valid, t, _BIG))
+        hi_ref[0, i] = jnp.max(jnp.where(valid, t, -_BIG))
+
+
+def _topk_kernel(n_ref, ec_ref, pue_ref, ci_ref, fc_ref, eff_ref, sw_ref,
+                 lohi_ref, w_ref, score_ref, tmin_ref, targ_ref, *, k: int):
+    ti = pl.program_id(0)
+    fids = _flat_ids()
+    valid = fids + ti * TILE < n_ref[0, 0]
+    cf, fcf, eff, sw = _tile_terms(ec_ref, pue_ref, ci_ref, fc_ref,
+                                   eff_ref, sw_ref)
     lohi = lohi_ref[...]                      # (4, 2): lo/hi per term
 
     def norm(x, i):
+        # degenerate span -> 0 contribution (matches ranking._minmax); the
+        # reciprocal form also keeps the ulp-level FMA difference between
+        # this pass's terms and sweep-1's lo from being amplified by 1e12
         lo, hi = lohi[i, 0], lohi[i, 1]
-        return (x - lo) / jnp.maximum(hi - lo, 1e-12)
+        span = hi - lo
+        rcp = jnp.where(span > 1e-12, 1.0 / jnp.maximum(span, 1e-12), 0.0)
+        return (x - lo) * rcp
 
     w = w_ref[...]
     score = (w[0, 0] * norm(cf, 0) + w[0, 1] * norm(fcf, 1)
              + w[0, 2] * (1.0 - norm(eff, 2)) + w[0, 3] * norm(sw, 3))
+    score = jnp.where(valid, score, jnp.inf)
     score_ref[...] = score
 
-    flat = score.reshape(-1)
-    idx = jnp.argmin(flat)
-    tmin_ref[0, 0] = flat[idx]
-    targ_ref[0, 0] = idx.astype(jnp.int32) + ti * TILE
+    # k is small and static -> unrolled min-extraction keeps everything 2D
+    # and avoids dynamic ref indexing.  Equal scores yield the lower flat id
+    # first, matching jnp.argmin's first-occurrence rule.
+    cur = score
+    for kk in range(k):
+        m = jnp.min(cur)
+        pos = jnp.min(jnp.where(cur == m, fids, TILE))
+        tmin_ref[0, kk] = m
+        targ_ref[0, kk] = pos + ti * TILE
+        cur = jnp.where(fids == pos, jnp.inf, cur)
+
+
+def _node_args(arrs, nt):
+    shape2d = (nt * SUBLANES, LANES)
+    return [a.reshape(shape2d) for a in arrs], shape2d
+
+
+_NODE_SPEC = pl.BlockSpec((SUBLANES, LANES), lambda t: (t, 0))
+_SCALAR_SPEC = pl.BlockSpec((1, 1), lambda t: (0, 0))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def maiz_ranking_pallas(ec, pue, ci_now, ci_fc, eff, sched, lohi, weights,
-                        *, interpret: bool = False):
-    """All node arrays: (N,) with N % 1024 == 0 (pad upstream in ops.py).
-
-    Returns (scores (N,), tile_min (nt,), tile_argmin (nt,))."""
+def maiz_lohi_pallas(ec, pue, ci_now, ci_fc, eff, sched, n_valid,
+                     *, interpret: bool = False):
+    """Sweep 1: global (4, 2) term lo/hi.  Node arrays (N,), N % 1024 == 0;
+    ``n_valid`` (1, 1) int32 masks the padded tail."""
     n = ec.shape[0]
     assert n % TILE == 0, n
     nt = n // TILE
-    shape2d = (nt * SUBLANES, LANES)
-    args = [a.reshape(shape2d) for a in (ec, pue, ci_now, ci_fc, eff, sched)]
-
-    node_spec = pl.BlockSpec((SUBLANES, LANES), lambda t: (t, 0))
-    scores, tmin, targ = pl.pallas_call(
-        _rank_kernel,
+    args, _ = _node_args((ec, pue, ci_now, ci_fc, eff, sched), nt)
+    lo, hi = pl.pallas_call(
+        _lohi_kernel,
         grid=(nt,),
-        in_specs=[node_spec] * 6 + [
+        in_specs=[_SCALAR_SPEC] + [_NODE_SPEC] * 6,
+        out_specs=[pl.BlockSpec((1, 4), lambda t: (t, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((nt, 4), jnp.float32)] * 2,
+        interpret=interpret,
+    )(n_valid, *args)
+    return jnp.stack([lo.min(0), hi.max(0)], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def maiz_topk_pallas(ec, pue, ci_now, ci_fc, eff, sched, n_valid, lohi,
+                     weights, *, k: int, interpret: bool = False):
+    """Sweep 2: scores + per-tile top-k.  Returns (scores (N,) with +inf in
+    the padded tail, tile_topk_scores (nt, k), tile_topk_idx (nt, k))."""
+    n = ec.shape[0]
+    assert n % TILE == 0, n
+    assert 1 <= k <= MAX_TILE_K, k
+    nt = n // TILE
+    args, shape2d = _node_args((ec, pue, ci_now, ci_fc, eff, sched), nt)
+    scores, tmin, targ = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        grid=(nt,),
+        in_specs=[_SCALAR_SPEC] + [_NODE_SPEC] * 6 + [
             pl.BlockSpec((4, 2), lambda t: (0, 0)),      # lo/hi
             pl.BlockSpec((1, 4), lambda t: (0, 0)),      # weights
         ],
         out_specs=[
-            node_spec,
-            pl.BlockSpec((1, 1), lambda t: (t, 0)),
-            pl.BlockSpec((1, 1), lambda t: (t, 0)),
+            _NODE_SPEC,
+            pl.BlockSpec((1, k), lambda t: (t, 0)),
+            pl.BlockSpec((1, k), lambda t: (t, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct(shape2d, jnp.float32),
-            jax.ShapeDtypeStruct((nt, 1), jnp.float32),
-            jax.ShapeDtypeStruct((nt, 1), jnp.int32),
+            jax.ShapeDtypeStruct((nt, k), jnp.float32),
+            jax.ShapeDtypeStruct((nt, k), jnp.int32),
         ],
         interpret=interpret,
-    )(*args, lohi, weights.reshape(1, 4))
-    return scores.reshape(n), tmin[:, 0], targ[:, 0]
+    )(n_valid, *args, lohi, weights.reshape(1, 4))
+    return scores.reshape(n), tmin, targ

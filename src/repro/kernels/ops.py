@@ -13,8 +13,8 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.selective_scan import selective_scan
-from repro.kernels.maizx_rank import TILE, maiz_ranking_pallas
-from repro.kernels.ref import term_lohi
+from repro.kernels.maizx_rank import (MAX_TILE_K, TILE, maiz_lohi_pallas,
+                                      maiz_topk_pallas)
 
 
 def _default_interpret() -> bool:
@@ -31,29 +31,62 @@ def flash_attention_op(q, k, v, *, window: int = 0,
                            block_k=block_k, interpret=interpret)
 
 
-def maiz_ranking_fused(ec, pue, ci_now, ci_fc, eff, sched, weights, *,
-                       interpret: Optional[bool] = None
-                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Fleet-scale fused MAIZ ranking.
+def maiz_ranking_topk(ec, pue, ci_now, ci_fc, eff, sched, weights, *,
+                      k: int = 16, lohi: Optional[jax.Array] = None,
+                      interpret: Optional[bool] = None
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fleet-scale fused MAIZ ranking with a merged top-k shortlist.
 
-    Arrays (N,) any float dtype; pads N up to the 1024-node tile internally.
-    Returns (scores (N,), best_score, best_node)."""
+    Arrays (N,) any float dtype; pads N up to the 1024-node tile internally
+    (padded lanes are masked, never shortlisted).  Two memory-bound sweeps:
+    a fused term+lo/hi pre-pass and the score+tile-top-k pass; pass ``lohi``
+    (4, 2) to pin the normalizers and skip sweep 1 (the placement engine
+    freezes them per decision epoch).
+
+    Returns (scores (N,), topk_scores (k',), topk_nodes (k',)) with
+    k' = min(k, N), ordered lexicographically by (score, node index) —
+    identical tie-breaking to ``jnp.argmin`` / stable sort."""
     if interpret is None:
         interpret = _default_interpret()
     n = ec.shape[0]
+    k_out = min(k, n)
+    k_tile = min(k_out, MAX_TILE_K)
     pad = (-n) % TILE
-    lohi = term_lohi(ec, pue, ci_now, ci_fc, eff, sched)
 
-    def padded(x, fill):
-        return jnp.pad(x.astype(jnp.float32), (0, pad), constant_values=fill)
+    def padded(x):
+        return jnp.pad(x.astype(jnp.float32), (0, pad))
 
-    # padding must never win the argmin: give it worst-case terms
-    args = (padded(ec, 1e9), padded(pue, 2.0), padded(ci_now, 1e9),
-            padded(ci_fc, 1e9), padded(eff, 0.0), padded(sched, 1e9))
-    scores, tmin, targ = maiz_ranking_pallas(
-        *args, lohi, weights.astype(jnp.float32), interpret=interpret)
-    best = jnp.argmin(tmin)
-    return scores[:n], tmin[best], targ[best]
+    args = tuple(padded(a) for a in (ec, pue, ci_now, ci_fc, eff, sched))
+    n_valid = jnp.full((1, 1), n, jnp.int32)
+    if lohi is None:
+        lohi = maiz_lohi_pallas(*args, n_valid, interpret=interpret)
+    scores, tmin, targ = maiz_topk_pallas(
+        *args, n_valid, lohi, weights.astype(jnp.float32), k=k_tile,
+        interpret=interpret)
+    scores = scores[:n]
+    if k_out > k_tile:
+        # the tile-local k is capped (unrolled extraction, MAX_TILE_K): a
+        # single tile could hold more than k_tile of the global top-k_out,
+        # so merge from the full score vector instead — exact, same
+        # lower-index tie rule, one extra O(N log k) host pass.
+        neg, pos = jax.lax.top_k(-scores, k_out)
+        return scores, -neg, pos.astype(jnp.int32)
+    # merge tile top-k's: candidates are (tile, rank)-ordered, so lax.top_k's
+    # lower-index-first tie rule preserves global (score, node) order.
+    neg, pos = jax.lax.top_k(-tmin.reshape(-1), k_out)
+    return scores, -neg, targ.reshape(-1)[pos]
+
+
+def maiz_ranking_fused(ec, pue, ci_now, ci_fc, eff, sched, weights, *,
+                       interpret: Optional[bool] = None
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fleet-scale fused MAIZ ranking (k=1 shortlist).
+
+    Returns (scores (N,), best_score, best_node)."""
+    scores, top_s, top_i = maiz_ranking_topk(
+        ec, pue, ci_now, ci_fc, eff, sched, weights, k=1,
+        interpret=interpret)
+    return scores, top_s[0], top_i[0]
 
 
 def selective_scan_op(dt, x, b, c, a, *, block_d: int = 128,

@@ -37,7 +37,9 @@ def maiz_ranking_ref(ec, pue, ci_now, ci_fc, eff, sched, lohi, weights):
 
     def norm(x, i):
         lo, hi = lohi[i, 0], lohi[i, 1]
-        return (x - lo) / jnp.maximum(hi - lo, 1e-12)
+        span = hi - lo
+        rcp = jnp.where(span > 1e-12, 1.0 / jnp.maximum(span, 1e-12), 0.0)
+        return (x - lo) * rcp
 
     score = (weights[0] * norm(terms[0], 0) + weights[1] * norm(terms[1], 1)
              + weights[2] * (1.0 - norm(terms[2], 2))

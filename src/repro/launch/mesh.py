@@ -6,15 +6,24 @@ jax device state (the dry-run must set XLA_FLAGS before first jax init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                             # jax >= 0.5 names axis types explicitly
+    from jax.sharding import AxisType
+
+    def _axis_kw(n):
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:              # older jax: every mesh axis is Auto already
+    AxisType = None
+
+    def _axis_kw(n):
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """(16,16)=256 chips per pod; (2,16,16)=512 chips across 2 pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes, **_axis_kw(len(shape)))
 
 
 def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
@@ -25,7 +34,7 @@ def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
             shape.append(n)
             axes.append(a)
     return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(shape))
+                         **_axis_kw(len(shape)))
 
 
 # Hardware constants (TPU v5e, per chip) — used by the roofline report.

@@ -1,0 +1,30 @@
+"""Fallback for environments without hypothesis: property tests skip,
+everything else in the module still runs.
+
+Usage in a test module:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_stub import given, settings, st
+"""
+import pytest
+
+
+class _Strategies:
+    """Accepts any strategy construction; values are never used because
+    ``given`` skips the test before hypothesis semantics matter."""
+
+    def __getattr__(self, name):
+        return lambda *a, **k: None
+
+
+st = _Strategies()
+
+
+def settings(*args, **kwargs):
+    return lambda f: f
+
+
+def given(*args, **kwargs):
+    return pytest.mark.skip(reason="hypothesis not installed")

@@ -1,0 +1,198 @@
+"""Shortlist placement engine vs the O(J·N) oracle (bit-exact parity over
+ragged N, ties, exhaustion), and the fused Pallas top-k vs ``jax.lax.top_k``
+in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import placement
+from repro.core.fleet import Fleet, synthetic_fleet
+from repro.core.scheduler import place_jobs
+from repro.kernels import ref
+from repro.kernels.ops import maiz_ranking_fused, maiz_ranking_topk
+
+
+def _uniform_fleet(n, chips=8, cap=8):
+    """Every node identical -> every score ties exactly."""
+    ones = jnp.ones((n,), jnp.float32)
+    return Fleet(
+        ci_now=300.0 * ones, ci_forecast=310.0 * ones, pue=1.2 * ones,
+        power_kw=10.0 * ones,
+        capacity=jnp.full((n,), cap, jnp.int32),
+        healthy=jnp.ones((n,), bool),
+        straggler_score=jnp.zeros((n,), jnp.float32),
+        flops_per_j=1e9 * ones,
+        chips_total=jnp.full((n,), chips, jnp.int32),
+    )
+
+
+def _assert_parity(fleet, demands, shortlist):
+    a = placement.place_jobs_shortlist(fleet, demands, shortlist=shortlist)
+    b = placement.place_jobs_full_rerank(fleet, demands)
+    np.testing.assert_array_equal(np.asarray(a.node), np.asarray(b.node))
+    np.testing.assert_array_equal(np.asarray(a.capacity),
+                                  np.asarray(b.capacity))
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# shortlist == full re-rank, bit-identical
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [5, 64, 1000, 1024, 1025, 2048, 3000])
+@pytest.mark.parametrize("shortlist", [1, 4, 32])
+def test_parity_ragged_n(n, shortlist):
+    fleet = synthetic_fleet(n, seed=n)
+    rng = np.random.default_rng(n)
+    demands = jnp.asarray(rng.integers(1, 96, 48), jnp.int32)
+    _assert_parity(fleet, demands, shortlist)
+
+
+def test_parity_shortlist_larger_than_fleet():
+    fleet = synthetic_fleet(17, seed=3)
+    demands = jnp.asarray([4] * 24, jnp.int32)
+    a, _ = _assert_parity(fleet, demands, shortlist=4096)
+    assert int(a.n_sweeps) == 1     # full cover: never needs a re-sweep
+
+
+def test_parity_under_exact_ties():
+    """Identical nodes -> degenerate normalizers, all scores tie exactly;
+    both paths must fill nodes in index order."""
+    fleet = _uniform_fleet(100)
+    demands = jnp.asarray([3] * 40, jnp.int32)
+    a, _ = _assert_parity(fleet, demands, shortlist=8)
+    # greedy + lowest-index tie-break: first job lands on node 0
+    assert int(a.node[0]) == 0
+    assert np.all(np.asarray(a.node) >= 0)
+
+
+def test_parity_capacity_exhaustion_and_unplaceable():
+    fleet = _uniform_fleet(6, chips=4, cap=4)
+    # 6*4 = 24 chips total; demands overflow -> later jobs unplaceable
+    demands = jnp.asarray([3] * 10, jnp.int32)
+    a, _ = _assert_parity(fleet, demands, shortlist=2)
+    assert np.asarray(a.node).min() == -1
+
+
+def test_parity_all_infeasible():
+    fleet = _uniform_fleet(32, cap=0)
+    demands = jnp.asarray([1] * 5, jnp.int32)
+    a, _ = _assert_parity(fleet, demands, shortlist=4)
+    assert np.all(np.asarray(a.node) == -1)
+    # impossible demands are rejected via the cap_max bound, not per-job
+    # fallback sweeps
+    assert int(a.n_sweeps) == 1
+
+
+def test_shortlist_reduces_sweeps():
+    """The acceptance-shaped property: one rank per epoch, not per job."""
+    fleet = synthetic_fleet(4096, seed=1)
+    demands = jnp.asarray([64] * 128, jnp.int32)
+    a, b = _assert_parity(fleet, demands, shortlist=64)
+    assert int(b.n_sweeps) == 128
+    assert int(a.n_sweeps) * 5 <= int(b.n_sweeps)
+
+
+def test_scheduler_wrapper_engines_agree():
+    fleet = synthetic_fleet(256, seed=9)
+    demands = jnp.asarray([16] * 32, jnp.int32)
+    a = place_jobs(fleet, demands, engine="shortlist", shortlist=16)
+    b = place_jobs(fleet, demands, engine="full")
+    np.testing.assert_array_equal(np.asarray(a.node), np.asarray(b.node))
+    assert int(a.n_sweeps) < int(b.n_sweeps)
+    with pytest.raises(ValueError):
+        place_jobs(fleet, demands, engine="bogus")
+
+
+def test_engine_kernel_path_matches_jnp():
+    """Pallas-sweep engine == jnp-sweep engine on a padded ragged fleet."""
+    fleet = synthetic_fleet(96, seed=5)
+    demands = jnp.asarray([8] * 16, jnp.int32)
+    a = placement.place_jobs_shortlist(fleet, demands, shortlist=8,
+                                       use_kernel=True, interpret=True)
+    b = placement.place_jobs_shortlist(fleet, demands, shortlist=8)
+    np.testing.assert_array_equal(np.asarray(a.node), np.asarray(b.node))
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas top-k vs jax.lax.top_k oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+def _rand_inputs(rng, n):
+    return (jnp.asarray(rng.random(n) * 100, jnp.float32),
+            jnp.asarray(1 + rng.random(n), jnp.float32),
+            jnp.asarray(rng.random(n) * 500, jnp.float32),
+            jnp.asarray(rng.random(n) * 500, jnp.float32),
+            jnp.asarray(rng.random(n), jnp.float32),
+            jnp.asarray(rng.random(n), jnp.float32))
+
+
+W = jnp.asarray([0.35, 0.25, 0.25, 0.15], jnp.float32)
+
+
+@pytest.mark.parametrize("n,k", [(1024, 8), (1000, 16), (2048, 4),
+                                 (5, 8), (1, 4), (2050, 3),
+                                 (2048, 100)])   # k > MAX_TILE_K fallback
+def test_pallas_topk_matches_lax_topk(n, k, rng):
+    args = _rand_inputs(rng, n)
+    scores, top_s, top_i = maiz_ranking_topk(*args, W, k=k, interpret=True)
+    # scores against the pure-jnp oracle
+    lohi = ref.term_lohi(*args)
+    want, _, want_arg = ref.maiz_ranking_ref(*args, lohi, W)
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(want),
+                               atol=1e-5)
+    # tile-merged top-k against lax.top_k on the kernel's own scores:
+    # exact equality required, tie-breaking included
+    kk = min(k, n)
+    assert top_s.shape == top_i.shape == (kk,)
+    neg, idx = jax.lax.top_k(-scores, kk)
+    np.testing.assert_array_equal(np.asarray(top_i), np.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(top_s), np.asarray(-neg))
+    # k=1 head is the argmin
+    assert int(top_i[0]) == int(want_arg)
+
+
+def test_pallas_topk_tie_break_lowest_index():
+    """Duplicate tiles -> exact score ties across tiles; the merge must keep
+    the lower-index copy, matching lax.top_k / argmin semantics."""
+    rng = np.random.default_rng(7)
+    base = rng.random(1024).astype(np.float32)
+    ci = np.tile(rng.random(1024).astype(np.float32), 2)
+    n = 2048
+    args = (jnp.asarray(np.tile(base, 2)), jnp.ones(n, jnp.float32),
+            jnp.asarray(ci), jnp.asarray(ci),
+            jnp.zeros(n, jnp.float32), jnp.zeros(n, jnp.float32))
+    scores, top_s, top_i = maiz_ranking_topk(*args, W, k=8, interpret=True)
+    neg, idx = jax.lax.top_k(-scores, 8)
+    np.testing.assert_array_equal(np.asarray(top_i), np.asarray(idx))
+    # both copies of a tied score appear, and the low-index copy leads
+    ti, ts = np.asarray(top_i), np.asarray(top_s)
+    for s in np.unique(ts):
+        dup = ti[ts == s]
+        np.testing.assert_array_equal(dup, np.sort(dup))
+        assert dup[0] < 1024
+
+
+def test_pallas_lohi_fused_prepass_matches_ref(rng):
+    """Sweep-1 (fused term+min/max) == the jnp pre-pass, padding masked."""
+    from repro.kernels.maizx_rank import TILE, maiz_lohi_pallas
+    for n in (1024, 1000, 1):
+        args = _rand_inputs(rng, n)
+        pad = (-n) % TILE
+        padded = tuple(jnp.pad(a, (0, pad)) for a in args)
+        lohi = maiz_lohi_pallas(*padded, jnp.full((1, 1), n, jnp.int32),
+                                interpret=True)
+        np.testing.assert_allclose(np.asarray(lohi),
+                                   np.asarray(ref.term_lohi(*args)),
+                                   rtol=1e-6)
+
+
+def test_fused_argmin_head_unchanged(rng):
+    """maiz_ranking_fused keeps its (scores, best_score, best_node) API."""
+    args = _rand_inputs(rng, 1500)
+    scores, best_s, best_n = maiz_ranking_fused(*args, W, interpret=True)
+    assert int(best_n) == int(jnp.argmin(scores))
+    np.testing.assert_allclose(float(best_s), float(scores[int(best_n)]))
