@@ -9,6 +9,7 @@ Paper artifacts:
 
 Framework benches:
   placement_scale      — greedy carbon-aware placement, 1e3..1e5 nodes
+  sim_scale            — rolling lifecycle fleet simulator (BENCH_sim.json)
   train_step_smoke     — reduced-arch train step wall time (CPU)
   decode_step_smoke    — reduced-arch decode step wall time (CPU)
   roofline_report      — aggregates results/dryrun/*.json (see §Roofline)
@@ -157,6 +158,76 @@ def bench_placement_scale():
         json.dump(artifact, f, indent=2)
 
 
+def bench_sim_scale():
+    """Rolling lifecycle fleet simulator (arrivals + departures + migration):
+    rank sweeps per job, bit-parity vs the lifecycle full-rerank oracle, and
+    emissions vs the two carbon-blind comparators.  N list / epoch count
+    overridable via SIM_NS / SIM_EPOCHS (CI smoke sets small values).
+    Emits BENCH_sim.json; exits nonzero on parity break, sweeps/job >= 0.2,
+    or the paper special case drifting beyond 0.05 pp of 85.68 % — the same
+    gating contract as the placement bench."""
+    import dataclasses
+    from repro.core.scenarios import run_paper_experiment
+    from repro.core.simulator import (SimConfig, generate_jobs,
+                                      simulate_fleet,
+                                      synthetic_lifecycle_fleet)
+    ns = tuple(int(x) for x in os.environ.get("SIM_NS", "4096").split(","))
+    epochs = int(os.environ.get("SIM_EPOCHS", "168"))
+    artifact = {"configs": []}
+    for n in ns:
+        cfg = SimConfig(epochs=epochs, seed=1, arrival_rate=12.0,
+                        mean_duration_h=12.0, migration_budget=2,
+                        deferrable_frac=0.1, shortlist=64)
+        fleet, traces, ridx = synthetic_lifecycle_fleet(n, cfg)
+        jobs = generate_jobs(cfg)
+        t0 = time.perf_counter()
+        a = simulate_fleet(fleet, traces, ridx, cfg, jobs=jobs)
+        us = (time.perf_counter() - t0) * 1e6 / max(epochs, 1)
+        spj = a.rank_sweeps / max(a.arrivals_placed, 1)
+        row(f"sim_shortlist_n{n}", us,
+            f"epochs={epochs};jobs={jobs.n};sweeps={a.rank_sweeps};"
+            f"sweeps_per_job={spj:.3f};migrations={a.migrations}")
+        entry = {"n": n, "epochs": epochs, "jobs": int(jobs.n),
+                 "rank_sweeps": int(a.rank_sweeps),
+                 "arrivals_placed": int(a.arrivals_placed),
+                 "sweeps_per_job": spj,
+                 "migrations": int(a.migrations),
+                 "emissions_g": a.emissions_g}
+        b = simulate_fleet(fleet, traces, ridx,
+                           dataclasses.replace(cfg, engine="full"),
+                           jobs=jobs)
+        parity = bool(np.array_equal(a.node_log, b.node_log)
+                      and a.emissions_g == b.emissions_g)
+        row(f"sim_oracle_n{n}", 0.0,
+            f"sweeps={b.rank_sweeps};parity={parity}")
+        entry["oracle_rank_sweeps"] = int(b.rank_sweeps)
+        entry["parity"] = parity
+        for comp in ("blind", "spread"):
+            c = simulate_fleet(fleet, traces, ridx,
+                               dataclasses.replace(cfg, engine=comp),
+                               jobs=jobs)
+            red = 100.0 * (1.0 - a.emissions_g / c.emissions_g)
+            row(f"sim_vs_{comp}_n{n}", 0.0, f"reduction={red:.2f}%")
+            entry[f"reduction_vs_{comp}_pct"] = red
+        artifact["configs"].append(entry)
+        if not parity:
+            raise SystemExit(f"sim lifecycle parity broken at n={n}")
+        if spj >= 0.2:
+            raise SystemExit(
+                f"sim sweeps/job {spj:.3f} >= 0.2 at n={n}")
+    r = run_paper_experiment()
+    drift = abs(r.reduction_pct["C"] - 85.68)
+    row("sim_paper_scenario_c", 0.0,
+        f"got={r.reduction_pct['C']:.3f}%;paper=85.68%;drift={drift:.3f}pp")
+    artifact["paper_scenario_c_pct"] = r.reduction_pct["C"]
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_sim.json")
+    with open(out, "w") as f:
+        json.dump(artifact, f, indent=2)
+    if drift > 0.05:
+        raise SystemExit(
+            f"paper scenario C drifted {drift:.3f}pp from 85.68%")
+
+
 def bench_train_step_smoke():
     from repro.configs import ARCHS
     from repro.models.model import ModelFlags, build_model
@@ -222,6 +293,7 @@ BENCHES = {
     "forecast_skill": bench_forecast_skill,
     "ranking_throughput": bench_ranking_throughput,
     "placement_scale": bench_placement_scale,
+    "sim_scale": bench_sim_scale,
     "train_step_smoke": bench_train_step_smoke,
     "decode_step_smoke": bench_decode_step_smoke,
     "roofline_report": bench_roofline_report,

@@ -3,10 +3,12 @@ greenest region's replica (paper §2: 'interconnect with hybrid approaches
 such as multicloud').
 
 Three serving replicas (ES/NL/DE) share weights; each batch of requests is
-routed by the fused shortlist placement engine (``repro.core.placement``)
-over a live 3-node Fleet — the same O(N + J·K) path that schedules
-million-node fleets — and gCO2/request is compared against round-robin
-routing.
+routed by the *lifecycle* placement engine (``scheduler.place_events``)
+over a live 3-node Fleet — the same release-aware O(N + J·K) path that
+schedules million-node fleets.  Every hour the previous batch RELEASES its
+slots and the next batch arrives in one event stream (release + arrival),
+exactly like the rolling fleet simulator's epochs; gCO2/request is compared
+against round-robin routing.
 
 Run:  PYTHONPATH=src python examples/multicloud_serve.py
 """
@@ -18,7 +20,7 @@ from repro.configs import ARCHS
 from repro.core import telemetry
 from repro.core.carbon import carbon_footprint
 from repro.core.fleet import Fleet
-from repro.core.scheduler import place_jobs
+from repro.core.scheduler import place_events
 from repro.models.model import ModelFlags, build_model
 from repro.serve.engine import ServeEngine
 
@@ -37,15 +39,16 @@ params = model.init(jax.random.key(0))
 engines = {r: ServeEngine(model, params, max_seq=64, batch_slots=BATCH_SLOTS)
            for r in REGIONS}
 
-def region_fleet(hour: int) -> Fleet:
-    """The 3 serving replicas as a schedulable Fleet at ``hour``."""
+def region_fleet(hour: int, capacity: jnp.ndarray) -> Fleet:
+    """The 3 serving replicas as a schedulable Fleet at ``hour``, with the
+    free slots carried over from the previous routing decisions."""
     ones = jnp.ones((3,), jnp.float32)
     return Fleet(
         ci_now=jnp.asarray([ci[r][hour] for r in REGIONS], jnp.float32),
         ci_forecast=jnp.asarray([ci[r][hour + 1] for r in REGIONS],
                                 jnp.float32),
         pue=jnp.asarray([pue[r] for r in REGIONS], jnp.float32),
-        power_kw=ones, capacity=jnp.full((3,), BATCH_SLOTS, jnp.int32),
+        power_kw=ones, capacity=capacity,
         healthy=jnp.ones((3,), bool), straggler_score=jnp.zeros_like(ones),
         flops_per_j=ones,
         chips_total=jnp.full((3,), BATCH_SLOTS, jnp.int32))
@@ -54,10 +57,21 @@ def region_fleet(hour: int) -> Fleet:
 rng = np.random.default_rng(0)
 g_aware = g_rr = 0.0
 total_sweeps = 0
+capacity = jnp.full((3,), BATCH_SLOTS, jnp.int32)
+prev_node = -1
 for b in range(N_BATCHES):
-    pl = place_jobs(region_fleet(b), jnp.asarray([BATCH_SLOTS], jnp.int32),
-                    engine="shortlist", shortlist=2)
-    aware = REGIONS[int(pl.node[0])]
+    # one lifecycle event stream per hour: the finished batch releases its
+    # slots, then the new batch arrives — the simulator's epoch in miniature
+    demands = jnp.asarray([-BATCH_SLOTS if prev_node >= 0 else 0,
+                           BATCH_SLOTS], jnp.int32)
+    targets = jnp.asarray([prev_node, -1], jnp.int32)
+    pl = place_events(region_fleet(b, capacity), demands, targets,
+                      engine="shortlist", shortlist=2)
+    prev_node = int(pl.node[1])
+    capacity = capacity.at[int(targets[0])].add(
+        BATCH_SLOTS if int(targets[0]) >= 0 else 0)
+    capacity = capacity.at[prev_node].add(-BATCH_SLOTS)
+    aware = REGIONS[prev_node]
     total_sweeps += int(pl.n_sweeps)
     rr = REGIONS[b % 3]
 

@@ -18,10 +18,21 @@ PERIODS = (24.0, 168.0, 8760.0)
 HARMONICS = (3, 2, 1)
 
 
-def _design(t: jax.Array) -> jax.Array:
-    """Fourier design matrix (T, F)."""
+def _active_periods(T: int) -> Tuple[Tuple[float, int], ...]:
+    """Periods with at least one full cycle of support in a T-hour window.
+
+    A harmonic much longer than the window (e.g. the 8760 h annual term fit
+    on a few days) is near-collinear with the intercept; float32 lstsq then
+    amplifies the ~1e-7 curvature difference into multi-thousand-unit
+    coefficient pairs that cancel in-sample and explode out-of-sample."""
+    return tuple((p, nh) for p, nh in zip(PERIODS, HARMONICS) if T >= p)
+
+
+def _design(t: jax.Array,
+            periods: Tuple[Tuple[float, int], ...]) -> jax.Array:
+    """Fourier design matrix (T, F) over the given (period, harmonics)."""
     cols = [jnp.ones_like(t)]
-    for period, nh in zip(PERIODS, HARMONICS):
+    for period, nh in periods:
         for k in range(1, nh + 1):
             w = 2 * jnp.pi * k * t / period
             cols.append(jnp.cos(w))
@@ -33,20 +44,30 @@ def _design(t: jax.Array) -> jax.Array:
 def fit_forecast(history: jax.Array, horizon: int,
                  t0: int = 0) -> Tuple[jax.Array, jax.Array]:
     """Fit on ``history`` (T,) starting at absolute hour t0; forecast the
-    next ``horizon`` hours.  Returns (forecast (horizon,), coef)."""
+    next ``horizon`` hours.  Returns (forecast (horizon,), coef).
+
+    ``coef`` is always padded to the full-basis width so the output shape
+    is independent of how many periods the window supports (vmap-safe)."""
     T = history.shape[0]
+    periods = _active_periods(T)
+    n_full = 1 + 2 * sum(HARMONICS)
     t_hist = t0 + jnp.arange(T, dtype=jnp.float32)
-    X = _design(t_hist)
+    X = _design(t_hist, periods)
     coef, *_ = jnp.linalg.lstsq(X, history.astype(jnp.float32))
     resid = history - X @ coef
     # Weather-regime correction: the last day's residual *pattern* persists
     # (wind fronts last ~days), decaying toward the climatological fit.
+    # Histories shorter than a day only have L < 24 residuals: cycle
+    # through those L explicitly — relying on jnp's out-of-bounds gather
+    # clamp would silently repeat the last residual 24-L times per day.
     h = jnp.arange(horizon, dtype=jnp.float32)
-    last_day = resid[-24:]
-    pattern = last_day[jnp.mod(h.astype(jnp.int32), 24)]
+    L = min(T, 24)
+    last_day = resid[-L:]
+    pattern = last_day[jnp.mod(h.astype(jnp.int32), L)]
     decay = 0.82 ** (h / 24.0 + 0.25)
     t_fut = t0 + T + h
-    fc = _design(t_fut) @ coef + pattern * decay
+    fc = _design(t_fut, periods) @ coef + pattern * decay
+    coef = jnp.pad(coef, (0, n_full - coef.shape[0]))
     return jnp.maximum(fc, 0.0), coef
 
 
@@ -58,7 +79,8 @@ def forecast_skill(history: jax.Array, test: jax.Array) -> jax.Array:
     """MAE ratio vs 24h-persistence baseline (<1 means we beat persistence)."""
     fc, _ = fit_forecast(history, test.shape[0])
     mae = jnp.mean(jnp.abs(fc - test))
-    persist = jnp.tile(history[-24:], (test.shape[0] + 23) // 24)[
+    L = min(history.shape[0], 24)
+    persist = jnp.tile(history[-L:], (test.shape[0] + L - 1) // L)[
         :test.shape[0]]
     mae_p = jnp.mean(jnp.abs(persist - test))
     return mae / jnp.maximum(mae_p, 1e-9)

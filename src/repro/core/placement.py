@@ -41,6 +41,33 @@ array shape — all reciprocals and cap-independent terms are therefore
 precomputed once per call and shared by both paths.)  The parity tests in
 ``tests/test_placement.py`` assert exact equality, ties and ragged shapes
 included.
+
+**Lifecycle events (arrivals + releases + migrations).**  The rolling fleet
+simulator (``repro.core.simulator``) interleaves job *departures* with
+arrivals: a release credits chips back to a known node, so that node's
+score *falls* mid-epoch.  The one-sided argument above ("scores only rise,
+the stale bound stays a sound lower bound") no longer holds, so the
+lifecycle engine (``place_lifecycle_shortlist``) adds release-aware epoch
+invalidation:
+
+- a release landing on a **shortlist** node is rescored in O(1) (exactly
+  like a landing job — the entry's score simply falls, and non-shortlist
+  scores are untouched, so the bound stays sound);
+- a release landing on a **non-shortlist** node marks the epoch *dirty*:
+  some score below the bound may now exist outside the shortlist, so the
+  next arrival forces a fresh full sweep (which re-validates the bound and
+  clears the flag).  ``cap_max`` — the no-sweep upper bound used to reject
+  impossible demands — is raised to the released node's new free capacity,
+  keeping it a sound upper bound in both directions.
+
+Epochs also start dirty (lazy initial sweep): leading releases are pure
+capacity edits, and the first arrival pays the one O(N) sweep for the
+epoch.  A migration is exactly release(old node) + arrival, so batching an
+epoch's releases ahead of its arrivals keeps the engine at ~1 sweep per
+epoch regardless of how many jobs depart.  Bit-parity with the lifecycle
+oracle (``place_lifecycle_full_rerank``) is preserved because every event
+either reuses the exact shared scoring graph or triggers the same masked
+argmin the oracle computes.
 """
 from __future__ import annotations
 
@@ -142,25 +169,59 @@ def place_jobs_full_rerank(fleet: Fleet, demands: jax.Array,
                            horizon_h: float = 1.0) -> PlacementResult:
     """O(J·N) oracle: full fleet rescore + masked argmin per job."""
     J = demands.shape[0]
+    return place_lifecycle_full_rerank(
+        fleet, demands, jnp.full((J,), -1, jnp.int32), weights, horizon_h)
+
+
+def place_lifecycle_full_rerank(fleet: Fleet, demands: jax.Array,
+                                nodes: jax.Array,
+                                weights: RankWeights = RankWeights(),
+                                horizon_h: float = 1.0) -> PlacementResult:
+    """Lifecycle oracle over an event stream, O(arrivals · N).
+
+    ``demands[e] > 0``: arrival — full rescore, masked argmin, land the job.
+    ``demands[e] < 0``: release — credit ``-demands[e]`` chips to
+    ``nodes[e]`` (a migration is release + arrival).
+    ``demands[e] == 0``: no-op (padding).
+
+    Output ``node[e]`` is the chosen node for arrivals (-1 if unplaceable),
+    the credited node for releases, and -1 for no-ops."""
+    E = demands.shape[0]
     ctx = frozen_ctx(fleet, weights, horizon_h)
+    healthy = fleet.healthy
 
-    def body(j, state):
-        cap, nodes = state
-        d = demands[j]
-        scores = _ctx_scores(cap, ctx, weights)
-        masked = jnp.where(cap >= d, scores, jnp.inf)
-        best = jnp.argmin(masked).astype(jnp.int32)
-        ok = jnp.isfinite(masked[best])
-        cap = cap.at[best].add(jnp.where(ok, -d, 0))
-        nodes = nodes.at[j].set(jnp.where(ok, best, -1))
-        return cap, nodes
+    def body(e, state):
+        cap, out, sweeps = state
+        d, tgt = demands[e], nodes[e]
 
-    init = (fleet.capacity, jnp.full((J,), -1, jnp.int32))
-    cap, nodes = jax.lax.fori_loop(0, J, body, init)
-    return PlacementResult(node=nodes,
+        def arrival(cap):
+            scores = _ctx_scores(cap, ctx, weights)
+            masked = jnp.where((cap >= d) & healthy, scores, jnp.inf)
+            best = jnp.argmin(masked).astype(jnp.int32)
+            ok = jnp.isfinite(masked[best])
+            return best, ok, sweeps + 1
+
+        def release(cap):
+            return tgt, jnp.bool_(True), sweeps
+
+        def noop(cap):
+            return jnp.int32(0), jnp.bool_(False), sweeps
+
+        chosen, ok, sweeps = jax.lax.cond(
+            d > 0, arrival,
+            lambda c: jax.lax.cond(d < 0, release, noop, c), cap)
+        # one formula for both directions: arrivals subtract d > 0,
+        # releases subtract d < 0 (i.e. credit chips back)
+        cap = cap.at[chosen].add(jnp.where(ok, -d, 0))
+        out = out.at[e].set(jnp.where(ok, chosen, -1))
+        return cap, out, sweeps
+
+    init = (fleet.capacity, jnp.full((E,), -1, jnp.int32),
+            jnp.zeros((), jnp.int32))
+    cap, out, sweeps = jax.lax.fori_loop(0, E, body, init)
+    return PlacementResult(node=out,
                            scores=_ctx_scores(cap, ctx, weights),
-                           capacity=cap,
-                           n_sweeps=jnp.asarray(J, jnp.int32))
+                           capacity=cap, n_sweeps=sweeps)
 
 
 def place_jobs_shortlist(fleet: Fleet, demands: jax.Array,
@@ -170,18 +231,47 @@ def place_jobs_shortlist(fleet: Fleet, demands: jax.Array,
                          use_kernel: bool = False,
                          interpret: Optional[bool] = None
                          ) -> PlacementResult:
-    """Shortlist-greedy placement, bit-identical to the O(J·N) oracle.
+    """Arrivals-only wrapper over the lifecycle engine (see below)."""
+    J = demands.shape[0]
+    return place_lifecycle_shortlist(
+        fleet, demands, jnp.full((J,), -1, jnp.int32), weights, horizon_h,
+        shortlist=shortlist, use_kernel=use_kernel, interpret=interpret)
 
-    ``shortlist`` (static) is K, the epoch shortlist size; ``use_kernel``
-    routes the epoch sweeps through the fused Pallas two-sweep kernel
+
+def place_lifecycle_shortlist(fleet: Fleet, demands: jax.Array,
+                              nodes: jax.Array,
+                              weights: RankWeights = RankWeights(),
+                              horizon_h: float = 1.0, *,
+                              shortlist: int = 32,
+                              use_kernel: bool = False,
+                              interpret: Optional[bool] = None
+                              ) -> PlacementResult:
+    """Shortlist-greedy lifecycle placement, bit-identical to the oracle.
+
+    Event stream semantics match ``place_lifecycle_full_rerank``:
+    ``demands[e] > 0`` arrival, ``< 0`` release of ``-demands[e]`` chips on
+    ``nodes[e]``, ``== 0`` no-op padding.  ``shortlist`` (static) is K, the
+    epoch shortlist size; ``use_kernel`` routes the epoch sweeps through
+    the fused Pallas two-sweep kernel
     (``repro.kernels.ops.maiz_ranking_topk``) — the TPU fleet-scale path.
     Kernel scores agree with the jnp path to float32 tolerance (not bitwise;
-    exact-parity guarantees are for the default jnp scoring)."""
-    N, J = fleet.n, demands.shape[0]
+    exact-parity guarantees are for the default jnp scoring).
+
+    The engine starts *dirty* (no shortlist yet): leading releases are pure
+    O(1) capacity edits and the first arrival performs the epoch's lazy
+    initial sweep.  Releases on shortlist nodes are rescored in O(1);
+    releases outside the shortlist re-dirty the epoch (their score fell
+    below what the bound can certify — see module docstring)."""
+    N, E = fleet.n, demands.shape[0]
     K = min(max(shortlist, 1), N)
     full_cover = K >= N          # shortlist == whole fleet: bound unused
     INF = jnp.float32(jnp.inf)
     ctx = frozen_ctx(fleet, weights, horizon_h)
+    # health is a HARD feasibility constraint (an outaged node is not a
+    # candidate, period — the soft sched-weight penalty only biases);
+    # static per call, so it composes with the bound argument unchanged
+    healthy = fleet.healthy
+    hcap = lambda cap: jnp.where(healthy, cap, 0)
 
     # One epoch sweep = scores + the top-(K+1) candidate list in (score,
     # node index) lexicographic order: the kernel path gets it from the
@@ -209,70 +299,108 @@ def place_jobs_shortlist(fleet: Fleet, demands: jax.Array,
             return cand_s[:K], cand_i[:K], INF, jnp.int32(N)
         return cand_s[:K], cand_i[:K], cand_s[K], cand_i[K]
 
-    def body(j, state):
-        cap, nodes, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps = state
-        d = demands[j]
+    karange = jnp.arange(K)
 
-        # best capacity-feasible shortlist entry by (score, node index)
-        sm = jnp.where(cap[sl_i] >= d, sl_s, INF)
-        m = jnp.min(sm)
-        kbest = jnp.argmin(jnp.where(sm == m, sl_i, jnp.int32(N)))
-        bnode = sl_i[kbest]
-        feasible = jnp.isfinite(m)
-        beats = (m < bound_s) | ((m == bound_s) & (bnode < bound_i))
-        use_sl = feasible & beats
-        # truly unplaceable without a sweep: the demand exceeds every free
-        # capacity (cap_max is a sound upper bound — capacity only shrinks
-        # after the sweep that measured it), or the shortlist covers the
-        # whole fleet and nothing fits
-        dead = (d > cap_max) | ((~feasible) & (~jnp.isfinite(bound_s)))
+    def body(e, state):
+        (cap, out, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps,
+         dirty) = state
+        d, tgt = demands[e], nodes[e]
 
         # cond branches read the (N,) capacity but return only scalars and
         # (K,)-sized shortlist state — the lone (N,) write (the capacity
-        # scatter) happens once below, where the loop updates it in place.
-        def from_shortlist(op):
-            cap, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps = op
-            new_s = _one_score(cap[bnode] - d, bnode, ctx, weights)
-            return (bnode, jnp.bool_(True), sl_s.at[kbest].set(new_s), sl_i,
-                    bound_s, bound_i, cap_max, sweeps)
+        # scatter below) covers arrivals AND releases via one signed add.
+        op = (cap, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps, dirty)
 
-        def from_sweep(op):
-            """Fresh O(N) sweep: place job j exactly, open a new epoch.
+        def release(op):
+            """Credit -d chips to node tgt: O(1), never sweeps.
 
-            The shortlist/bound come from the sweep's pre-placement top-k;
-            the landed node's entry is patched in place (scores only rise,
-            so the stale bound stays a sound lower bound on non-shortlist
-            scores — see module docstring)."""
-            cap, _, _, _, _, _, sweeps = op
-            scores, cand_s, cand_i = sweep_topk(cap)
-            masked = jnp.where(cap >= d, scores, INF)
-            best = jnp.argmin(masked).astype(jnp.int32)
-            ok = jnp.isfinite(masked[best])
-            new_s = _one_score(cap[best] - d, best, ctx, weights)
-            sl_s, sl_i, bound_s, bound_i = split_shortlist(cand_s, cand_i)
-            sl_s = jnp.where(ok & (sl_i == best), new_s, sl_s)
-            return (best, ok, sl_s, sl_i, bound_s, bound_i,
-                    jnp.max(cap), sweeps + 1)
+            In-shortlist: rescore the entry (non-shortlist scores are
+            untouched, the bound stays sound).  Outside: the node's score
+            fell below anything the bound can certify -> dirty."""
+            cap, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps, dirty = op
+            new_cap = cap[tgt] - d              # d < 0: adds chips
+            hitmask = (sl_i == tgt)
+            hit = (~dirty) & jnp.any(hitmask)
+            new_s = _one_score(new_cap, tgt, ctx, weights)
+            sl_s = jnp.where(hit & hitmask, new_s, sl_s)
+            return (tgt, jnp.bool_(True), sl_s, sl_i, bound_s, bound_i,
+                    jnp.maximum(cap_max,
+                                jnp.where(healthy[tgt], new_cap, 0)),
+                    sweeps, dirty | (~hit))
 
-        def unplaceable(op):
-            cap, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps = op
-            return (jnp.int32(0), jnp.bool_(False), sl_s, sl_i,
-                    bound_s, bound_i, cap_max, sweeps)
+        def noop(op):
+            cap, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps, dirty = op
+            return (jnp.int32(0), jnp.bool_(False), sl_s, sl_i, bound_s,
+                    bound_i, cap_max, sweeps, dirty)
 
-        chosen, ok, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps = \
-            jax.lax.cond(
+        def arrival(op):
+            cap, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps, dirty = op
+            # best feasible (capacity + health) shortlist entry by
+            # (score, node index)
+            sm = jnp.where((cap[sl_i] >= d) & healthy[sl_i], sl_s, INF)
+            m = jnp.min(sm)
+            kbest = jnp.argmin(jnp.where(sm == m, sl_i, jnp.int32(N)))
+            bnode = sl_i[kbest]
+            feasible = jnp.isfinite(m)
+            beats = (m < bound_s) | ((m == bound_s) & (bnode < bound_i))
+            use_sl = (~dirty) & feasible & beats
+            # truly unplaceable without a sweep: the demand exceeds every
+            # free capacity (cap_max is a sound upper bound — it only grows
+            # by explicit release credits), or the clean shortlist covers
+            # the whole fleet and nothing fits
+            dead = (d > cap_max) | ((~dirty) & (~feasible)
+                                    & (~jnp.isfinite(bound_s)))
+
+            def from_shortlist(op):
+                cap, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps, _ = op
+                new_s = _one_score(cap[bnode] - d, bnode, ctx, weights)
+                return (bnode, jnp.bool_(True),
+                        jnp.where(karange == kbest, new_s, sl_s), sl_i,
+                        bound_s, bound_i, cap_max, sweeps, jnp.bool_(False))
+
+            def from_sweep(op):
+                """Fresh O(N) sweep: place this job exactly, open a new
+                (clean) epoch.  The shortlist/bound come from the sweep's
+                pre-placement top-k; the landed node's entry is patched in
+                place."""
+                cap, _, _, _, _, _, sweeps, _ = op
+                scores, cand_s, cand_i = sweep_topk(cap)
+                masked = jnp.where((cap >= d) & healthy, scores, INF)
+                best = jnp.argmin(masked).astype(jnp.int32)
+                ok = jnp.isfinite(masked[best])
+                new_s = _one_score(cap[best] - d, best, ctx, weights)
+                sl_s, sl_i, bound_s, bound_i = split_shortlist(cand_s,
+                                                               cand_i)
+                sl_s = jnp.where(ok & (sl_i == best), new_s, sl_s)
+                return (best, ok, sl_s, sl_i, bound_s, bound_i,
+                        jnp.max(hcap(cap)), sweeps + 1, jnp.bool_(False))
+
+            def unplaceable(op):
+                cap, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps, dy = op
+                return (jnp.int32(0), jnp.bool_(False), sl_s, sl_i,
+                        bound_s, bound_i, cap_max, sweeps, dy)
+
+            return jax.lax.cond(
                 use_sl, from_shortlist,
-                lambda op: jax.lax.cond(dead, unplaceable, from_sweep, op),
-                (cap, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps))
-        cap = cap.at[chosen].add(jnp.where(ok, -d, 0))
-        nodes = nodes.at[j].set(jnp.where(ok, chosen, -1))
-        return cap, nodes, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps
+                lambda o: jax.lax.cond(dead, unplaceable, from_sweep, o),
+                op)
 
-    _, cand_s0, cand_i0 = sweep_topk(fleet.capacity)
-    sl_s0, sl_i0, bound_s0, bound_i0 = split_shortlist(cand_s0, cand_i0)
-    state = (fleet.capacity, jnp.full((J,), -1, jnp.int32), sl_s0, sl_i0,
-             bound_s0, bound_i0, jnp.max(fleet.capacity), jnp.int32(1))
-    cap, nodes, _, _, _, _, _, sweeps = jax.lax.fori_loop(0, J, body, state)
-    return PlacementResult(node=nodes,
+        (chosen, ok, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps,
+         dirty) = jax.lax.cond(
+            d > 0, arrival,
+            lambda o: jax.lax.cond(d < 0, release, noop, o), op)
+        # arrivals subtract d > 0; releases subtract d < 0 (credit)
+        cap = cap.at[chosen].add(jnp.where(ok, -d, 0))
+        out = out.at[e].set(jnp.where(ok, chosen, -1))
+        return (cap, out, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps,
+                dirty)
+
+    state = (fleet.capacity, jnp.full((E,), -1, jnp.int32),
+             jnp.full((K,), INF), jnp.full((K,), N, jnp.int32),
+             INF, jnp.int32(N), jnp.max(hcap(fleet.capacity)),
+             jnp.zeros((), jnp.int32), jnp.bool_(True))
+    out_state = jax.lax.fori_loop(0, E, body, state)
+    cap, out, sweeps = out_state[0], out_state[1], out_state[7]
+    return PlacementResult(node=out,
                            scores=_ctx_scores(cap, ctx, weights),
                            capacity=cap, n_sweeps=sweeps)

@@ -66,14 +66,15 @@ def scenario_b_alloc(ci: np.ndarray, pue: np.ndarray, demand: float):
 
 
 def scenario_c_alloc(ci: np.ndarray, pue: np.ndarray, demand: float):
-    """MAIZX active shifting: best CFP-rate node each hour, others OFF."""
-    N, T = ci.shape
-    best = _effective_rate(ci, pue).argmin(axis=0)
-    util = np.zeros((N, T))
-    on = np.zeros((N, T))
-    util[best, np.arange(T)] = demand
-    on[best, np.arange(T)] = 1.0
-    return util, on
+    """MAIZX active shifting: best CFP-rate node each hour, others OFF.
+
+    Routed through the rolling lifecycle simulator
+    (``simulator.paper_scenario_alloc``): one 1-epoch job per hour placed
+    by the same engine that schedules multi-thousand-node fleets — the
+    paper experiment is the N=3 / T=8760 special case of ``simulate_fleet``
+    rather than a separate closed form."""
+    from repro.core.simulator import paper_scenario_alloc
+    return paper_scenario_alloc(ci, pue, demand)
 
 
 SCENARIOS = {
@@ -134,3 +135,35 @@ def place_jobs(fleet: Fleet, demands: jax.Array,
 place_jobs_jit = jax.jit(place_jobs,
                          static_argnames=("engine", "shortlist",
                                           "use_kernel"))
+
+
+def place_events(fleet: Fleet, demands: jax.Array, nodes: jax.Array,
+                 weights: RankWeights = RankWeights(),
+                 horizon_h: float = 1.0, *,
+                 engine: str = "shortlist", shortlist: int = 32,
+                 use_kernel: bool = False) -> Placement:
+    """Lifecycle placement over an interleaved event stream.
+
+    ``demands[e] > 0`` is an arrival (greedily placed, like ``place_jobs``);
+    ``demands[e] < 0`` releases ``-demands[e]`` chips back to ``nodes[e]``
+    (a finished or migrating job); ``demands[e] == 0`` is no-op padding.
+    Releases make scores *fall* mid-epoch, which the shortlist engine
+    absorbs with release-aware epoch invalidation while staying bit-exact
+    to the full-rerank oracle (``engine="full"``) — see
+    ``repro.core.placement``.  This is the per-epoch entry point of the
+    rolling fleet simulator (``repro.core.simulator``)."""
+    if engine == "shortlist":
+        r = placement.place_lifecycle_shortlist(
+            fleet, demands, nodes, weights, horizon_h, shortlist=shortlist,
+            use_kernel=use_kernel)
+    elif engine == "full":
+        r = placement.place_lifecycle_full_rerank(fleet, demands, nodes,
+                                                  weights, horizon_h)
+    else:
+        raise ValueError(f"unknown placement engine: {engine!r}")
+    return Placement(node=r.node, scores=r.scores, n_sweeps=r.n_sweeps)
+
+
+place_events_jit = jax.jit(place_events,
+                           static_argnames=("engine", "shortlist",
+                                            "use_kernel"))

@@ -1,0 +1,567 @@
+"""Rolling multi-epoch fleet simulator: arrivals, departures, migration.
+
+The paper's headline (§5, Scenario C: -85.68 % CO2) comes from *continuous*
+operation — work shifts hour by hour as carbon intensity moves.  This module
+advances a fleet through T hourly epochs.  Each epoch:
+
+1. refreshes ``ci_now`` from per-region hourly traces and ``ci_forecast``
+   from ``forecast.fit_forecast`` over the trailing ``history_h`` window
+   (the FCFP source is the real forecaster, not a 24 h-mean oracle);
+2. releases finished jobs (their chips return to their nodes — scores
+   *fall*, which is why placement runs on the lifecycle engine with
+   release-aware epoch invalidation, see ``repro.core.placement``);
+3. optionally migrates the worst-placed running jobs when the CI landscape
+   has shifted enough to beat the checkpoint/restore carbon cost
+   (``migration_budget`` per epoch, cost model in gCO2 via
+   ``carbon.job_energy_kwh``), and force-evicts jobs from outaged regions;
+4. admits a stochastic-but-seeded arrival stream (diurnal modulation,
+   optional flash crowds, deferrable batch jobs that wait for greener
+   hours), placing every event through ONE lifecycle-engine call —
+   releases batched ahead of arrivals so the whole epoch costs ~1 rank
+   sweep;
+5. accounts emissions: per-node energy from the affine utilization model
+   (``fleet.IDLE_POWER_FRAC``), idle nodes powered off when
+   ``power_off_idle``, migration overhead charged at the source node's CI.
+
+``engine="shortlist"`` and ``engine="full"`` produce bit-identical
+trajectories (asserted by the lifecycle parity tests and the
+``sim_scale`` bench).  Two carbon-blind comparators:
+
+- ``engine="blind"``: lowest-index first-fit with the same idle power-off —
+  a strong consolidator that isolates the *carbon-awareness* contribution;
+- ``engine="spread"``: round-robin, every node always on — the paper's
+  baseline scenario generalized to fleet scale (isolates awareness +
+  consolidation + power-off together, the Scenario-C-vs-baseline framing).
+
+``paper_scenario_alloc`` is the N=3 / T=8760 special case: one 1-epoch job
+per hour carrying the paper's aggregate demand, CFP-only weights, idle
+power-off — reproducing Scenario C's (util, on) matrices through the same
+code path that runs 65k-node fleets (see ``scheduler.scenario_c_alloc``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import forecast, telemetry
+from repro.core.carbon import job_energy_kwh
+from repro.core.fleet import IDLE_POWER_FRAC, Fleet
+from repro.core.placement import (place_lifecycle_full_rerank,
+                                  place_lifecycle_shortlist)
+from repro.core.ranking import RankWeights
+
+# job state machine
+_PENDING, _ACTIVE, _DONE, _DROPPED = 0, 1, 2, 3
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    epochs: int = 168
+    seed: int = 0
+    weights: RankWeights = RankWeights()
+    engine: str = "shortlist"       # shortlist | full | blind | spread
+    shortlist: int = 64
+    use_kernel: bool = False
+    horizon_h: int = 24             # FCFP forecast horizon
+    history_h: int = 336            # trailing window fed to fit_forecast
+    # --- arrival process (seeded, deterministic) ---
+    arrival_rate: float = 12.0      # mean arrivals / epoch
+    diurnal: bool = True            # business-hours modulation
+    flash_crowd: Optional[Tuple[int, int, float]] = None  # (t0, len, mult)
+    outage: Optional[Tuple[int, int, int]] = None  # (region, t0, len)
+    mean_duration_h: float = 12.0
+    chips_lo: int = 8
+    chips_hi: int = 64
+    deferrable_frac: float = 0.0    # batch jobs that can wait for green hours
+    defer_max_h: int = 6
+    # --- migration ---
+    migration_budget: int = 0       # max policy migrations / epoch
+    migration_overhead_h: float = 0.05   # checkpoint+restore wall clock
+    # --- power model ---
+    power_off_idle: bool = True     # nodes with no jobs draw zero
+    # Powered-off nodes get this straggler bonus so the SCHEDULE_WEIGHT
+    # term biases toward consolidation: landing on an already-on node only
+    # adds dynamic power, while waking an off node pays the idle floor too.
+    # Pure greedy CFP ranking is anti-consolidating (occupancy raises a
+    # node's footprint, pushing the next job to a fresh idle node) — at
+    # IDLE_POWER_FRAC = 0.35 that spread costs more than the CI spread
+    # saves.  0 disables.
+    consolidate: float = 1.0
+
+    @property
+    def use_forecast(self) -> bool:
+        return self.weights.w2 != 0.0
+
+
+@dataclasses.dataclass
+class JobSchedule:
+    """Struct-of-arrays over jobs, sorted by arrival epoch."""
+    arrive: np.ndarray      # (J,) epoch of arrival
+    chips: np.ndarray       # (J,) chip demand
+    duration: np.ndarray    # (J,) epochs of runtime
+    load: np.ndarray        # (J,) float dynamic load (util accounting)
+    deferrable: np.ndarray  # (J,) bool
+
+    @property
+    def n(self) -> int:
+        return self.arrive.shape[0]
+
+
+def generate_jobs(cfg: SimConfig) -> JobSchedule:
+    """Seeded stochastic arrival stream: Poisson with diurnal modulation and
+    an optional flash crowd; geometric durations; uniform chip demands."""
+    rng = np.random.default_rng(np.uint64(cfg.seed) * np.uint64(977) + 13)
+    t = np.arange(cfg.epochs)
+    rate = np.full(cfg.epochs, float(cfg.arrival_rate))
+    if cfg.diurnal:
+        rate *= 1.0 + 0.4 * np.cos(2 * np.pi * (t % 24 - 14) / 24)
+    if cfg.flash_crowd is not None:
+        t0, length, mult = cfg.flash_crowd
+        rate[t0:t0 + length] *= mult
+    counts = rng.poisson(rate)
+    arrive = np.repeat(t, counts)
+    J = arrive.shape[0]
+    chips = rng.integers(cfg.chips_lo, cfg.chips_hi + 1, J)
+    # duration = 1 + Geometric(p), mean 1 + 1/p; p clamped into (0, 1] so
+    # mean_duration_h in (1, 2) degrades to all-2-epoch jobs, not a crash
+    p = min(1.0, 1.0 / max(cfg.mean_duration_h - 1.0, 1e-9))
+    duration = 1 + rng.geometric(p, J) \
+        if cfg.mean_duration_h > 1.0 else np.ones(J, np.int64)
+    deferrable = rng.random(J) < cfg.deferrable_frac
+    return JobSchedule(arrive=arrive, chips=chips.astype(np.int64),
+                       duration=duration.astype(np.int64),
+                       load=chips.astype(np.float64),
+                       deferrable=deferrable)
+
+
+@dataclasses.dataclass
+class SimResult:
+    emissions_g: float              # total, incl. migration overhead
+    migration_cost_g: float
+    rank_sweeps: int
+    arrivals_placed: int            # arrival events landed (incl. re-placements)
+    jobs_completed: int
+    jobs_dropped: int
+    jobs_deferred: int              # deferral decisions taken
+    migrations: int
+    evictions: int
+    node_log: np.ndarray            # (J,) final node per job (-1 = dropped)
+    first_node: np.ndarray          # (J,) first placement per job
+    emissions_series: np.ndarray    # (T,) gCO2 per epoch
+    util: Optional[np.ndarray] = None   # (N, T) when record_matrices
+    on: Optional[np.ndarray] = None
+
+
+# ---------------------------------------------------------------------------
+# jitted epoch step: slice traces -> forecast -> build fleet -> place events
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("statics",))
+def _epoch_step(traces, ridx, pue, power_kw, chips_total, straggler,
+                flops_per_j, region_pue, t, cap, healthy, demands, nodes,
+                statics):
+    """One simulator epoch on-device: slice the CI column, refresh the FCFP
+    forecast, build the Fleet and run the lifecycle placement engine.
+    ``straggler`` already carries the per-epoch consolidation bonus."""
+    (engine, shortlist, use_kernel, weights, horizon_h, history_h,
+     use_forecast, defer_max_h) = statics
+    ci_now_r = jax.lax.dynamic_slice_in_dim(traces, t, 1, axis=1)[:, 0]
+    ci_now = ci_now_r[ridx]
+    if use_forecast:
+        window = jax.lax.dynamic_slice_in_dim(
+            traces, t - history_h, history_h, axis=1)
+        fc, _ = forecast.forecast_regions(window, horizon_h, 0)  # (R, H)
+        ci_fc = jnp.mean(fc, axis=-1)[ridx]
+        # greenest achievable CFP rate inside the deferral window, for the
+        # deferrable-batch policy (min over regions and near-term hours)
+        fut_rate = jnp.min(fc[:, :defer_max_h] * region_pue[:, None])
+    else:
+        ci_fc = ci_now
+        fut_rate = jnp.float32(jnp.inf)
+    fleet = Fleet(ci_now=ci_now.astype(jnp.float32),
+                  ci_forecast=ci_fc.astype(jnp.float32),
+                  pue=pue, power_kw=power_kw, capacity=cap,
+                  healthy=healthy, straggler_score=straggler,
+                  flops_per_j=flops_per_j, chips_total=chips_total)
+    if engine == "full":
+        r = place_lifecycle_full_rerank(fleet, demands, nodes, weights,
+                                        horizon_h=1.0)
+    else:
+        r = place_lifecycle_shortlist(fleet, demands, nodes, weights,
+                                      horizon_h=1.0, shortlist=shortlist,
+                                      use_kernel=use_kernel)
+    cur_rate = jnp.min(jnp.where(healthy, ci_now * pue, jnp.inf))
+    return r.node, r.capacity, r.n_sweeps, ci_now, cur_rate, fut_rate
+
+
+def _pad_bucket(n: int) -> int:
+    """Round the event count up to a small set of static sizes so the jitted
+    epoch step compiles O(log) times, not O(T)."""
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+# ---------------------------------------------------------------------------
+# the simulator
+# ---------------------------------------------------------------------------
+
+
+def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
+                   cfg: SimConfig, jobs: Optional[JobSchedule] = None,
+                   record_matrices: bool = False) -> SimResult:
+    """Advance ``fleet0`` (capacity = free chips at t=0) through
+    ``cfg.epochs`` hourly epochs.
+
+    ``region_ci`` is (R, history_h + epochs + margin) hourly CI; nodes map
+    to regions via ``ridx``.  Epoch t reads column ``history_h + t`` as
+    ``ci_now`` and feeds the trailing ``history_h`` window to the FCFP
+    forecaster.  ``jobs`` defaults to ``generate_jobs(cfg)``.
+    """
+    N, T = fleet0.n, cfg.epochs
+    jobs = jobs if jobs is not None else generate_jobs(cfg)
+    J = jobs.n
+    if cfg.engine not in ("shortlist", "full", "blind", "spread"):
+        raise ValueError(f"unknown simulator engine: {cfg.engine!r}")
+    blind = cfg.engine in ("blind", "spread")
+    spread = cfg.engine == "spread"
+    rr_ptr = [0]                            # round-robin pointer (spread)
+
+    traces = jnp.asarray(region_ci, jnp.float32)
+    ridx_d = jnp.asarray(ridx, jnp.int32)
+    # representative PUE per region row; regions with no nodes get +inf so
+    # they can't win the deferral policy's "greenest upcoming hour" min
+    region_pue = np.full(region_ci.shape[0], np.inf)
+    np.minimum.at(region_pue, ridx, np.asarray(fleet0.pue, np.float64))
+    region_pue_d = jnp.asarray(region_pue, jnp.float32)
+
+    # host mirrors for policy + accounting (f64)
+    pue_h = np.asarray(fleet0.pue, np.float64)
+    power_h = np.asarray(fleet0.power_kw, np.float64)
+    chips_total_h = np.asarray(fleet0.chips_total, np.int64)
+    healthy0 = np.asarray(fleet0.healthy, bool)
+
+    cap = fleet0.capacity
+    cap_h = np.asarray(cap, np.int64)
+    njobs = np.zeros(N, np.int64)          # running jobs per node
+    load_on = np.zeros(N, np.float64)      # dynamic load per node
+
+    # job table
+    jnode = np.full(J, -1, np.int64)
+    jfirst = np.full(J, -1, np.int64)
+    jend = np.full(J, -1, np.int64)
+    jstate = np.full(J, _PENDING, np.int8)
+    ends: Dict[int, list] = {}
+    by_arrival: Dict[int, list] = {}
+    for j in range(J):
+        by_arrival.setdefault(int(jobs.arrive[j]), []).append(j)
+    deferred: Dict[int, list] = {}
+
+    emissions = 0.0
+    mig_cost_total = 0.0
+    sweeps = placed = completed = dropped = deferred_n = 0
+    migrations = evictions = 0
+    series = np.zeros(T)
+    util_m = np.zeros((N, T)) if record_matrices else None
+    on_m = np.zeros((N, T)) if record_matrices else None
+
+    statics = (cfg.engine, cfg.shortlist, cfg.use_kernel, cfg.weights,
+               cfg.horizon_h, cfg.history_h,
+               cfg.use_forecast and not blind, cfg.defer_max_h)
+    overhead_s = cfg.migration_overhead_h * 3600.0
+
+    for t in range(T):
+        a = cfg.history_h + t
+        ci_col = region_ci[:, a][ridx]                       # (N,) f64
+        healthy = healthy0.copy()
+        if cfg.outage is not None:
+            reg, t0, length = cfg.outage
+            if t0 <= t < t0 + length:
+                healthy &= (ridx != reg)
+
+        # ---- 1. end-of-life releases --------------------------------
+        rel_jobs = [j for j in ends.pop(t, []) if jstate[j] == _ACTIVE]
+        for j in rel_jobs:
+            jstate[j] = _DONE
+            completed += 1
+            njobs[jnode[j]] -= 1
+            load_on[jnode[j]] -= jobs.load[j]
+
+        # ---- 2. forced evictions + migration policy -----------------
+        active = np.where(jstate == _ACTIVE)[0]
+        evict = active[~healthy[jnode[active]]] if cfg.outage else \
+            np.empty(0, np.int64)
+        mig: list = []
+        if cfg.migration_budget > 0 and not blind and active.size:
+            stay = active[healthy[jnode[active]]]
+            free = cap_h.copy()
+            rate = np.where(healthy, pue_h * ci_col, np.inf)
+            # best achievable CFP rate per distinct chip demand, O(C·N)
+            best_rate: Dict[int, float] = {}
+            for c in np.unique(jobs.chips[stay]):
+                feas = rate[free >= c]
+                best_rate[int(c)] = float(feas.min()) if feas.size else np.inf
+            # per-chip-hour energy of a job (kWh): chips · board+host power
+            e_kwh_h = job_energy_kwh(3600.0, 1, 1)  # per chip per hour
+            gain = np.empty(stay.size)
+            for i, j in enumerate(stay):
+                remaining = max(int(jend[j]) - t, 0)
+                br = best_rate[int(jobs.chips[j])]
+                benefit = ((rate[jnode[j]] - br)
+                           * float(e_kwh_h) * jobs.chips[j] * remaining)
+                cost = (float(job_energy_kwh(overhead_s, 1, int(jobs.chips[j])))
+                        * rate[jnode[j]])
+                gain[i] = benefit - cost
+            order = np.argsort(-gain, kind="stable")
+            mig = [int(stay[i]) for i in order[:cfg.migration_budget]
+                   if gain[i] > 0.0]
+        migrations += len(mig)
+        evictions += evict.size
+        movers = list(evict) + mig
+        for j in movers:
+            njobs[jnode[j]] -= 1
+            load_on[jnode[j]] -= jobs.load[j]
+            if j in mig:
+                mig_cost_total += (
+                    float(job_energy_kwh(overhead_s, 1, int(jobs.chips[j])))
+                    * pue_h[jnode[j]] * ci_col[jnode[j]])
+
+        # ---- 3. new arrivals (+ deferral policy) --------------------
+        arr_jobs = deferred.pop(t, []) + by_arrival.pop(t, [])
+        # deferral decided after the jitted step computes rates; we peek
+        # using the raw trace for the policy signal only when forecasting
+        # is off-path (blind engine never defers)
+        ev_d = ([-int(jobs.chips[j]) for j in rel_jobs]
+                + [-int(jobs.chips[j]) for j in movers]
+                + [int(jobs.chips[j]) for j in movers]
+                + [int(jobs.chips[j]) for j in arr_jobs])
+        ev_n = ([int(jnode[j]) for j in rel_jobs]
+                + [int(jnode[j]) for j in movers]
+                + [-1] * (len(movers) + len(arr_jobs)))
+        E = _pad_bucket(max(len(ev_d), 1))
+        dem = np.zeros(E, np.int32)
+        tgt = np.full(E, -1, np.int32)
+        dem[:len(ev_d)] = ev_d
+        tgt[:len(ev_n)] = ev_n
+        arr_off = len(rel_jobs) + 2 * len(movers)
+
+        if blind:
+            out, cap_h = _place_blind(dem, tgt, cap_h, healthy, rr_ptr,
+                                      spread)
+            cap = jnp.asarray(cap_h, fleet0.capacity.dtype)
+            cur_rate = fut_rate = np.inf
+        else:
+            strag = jnp.asarray(
+                np.asarray(fleet0.straggler_score, np.float64)
+                + cfg.consolidate * (njobs == 0), jnp.float32)
+            out, cap, n_sw, _, cur_rate, fut_rate = _epoch_step(
+                traces, ridx_d, fleet0.pue, fleet0.power_kw,
+                fleet0.chips_total, strag,
+                fleet0.flops_per_j, region_pue_d, jnp.int32(a), cap,
+                jnp.asarray(healthy), jnp.asarray(dem), jnp.asarray(tgt),
+                statics)
+            out = np.asarray(out)
+            cap_h = np.asarray(cap, np.int64)
+            sweeps += int(n_sw)
+            cur_rate, fut_rate = float(cur_rate), float(fut_rate)
+
+        # ---- 4. record outcomes -------------------------------------
+        # deferrable jobs whose green hour is coming release their slot
+        # again (we re-run them next epoch); done post-hoc so the event
+        # stream stays identical across engines
+        green_later = fut_rate < 0.95 * cur_rate
+        redo_d, redo_n = [], []
+        for i, j in enumerate(movers + arr_jobs):
+            node = int(out[arr_off - len(movers) + i]) if i < len(movers) \
+                else int(out[arr_off + (i - len(movers))])
+            is_new = i >= len(movers)
+            if is_new and node >= 0 and green_later and jobs.deferrable[j] \
+                    and (t - int(jobs.arrive[j])) < cfg.defer_max_h:
+                # take the placement back: defer to next epoch
+                redo_d.append(-int(jobs.chips[j]))
+                redo_n.append(node)
+                deferred.setdefault(t + 1, []).append(j)
+                deferred_n += 1
+                continue
+            if node < 0:
+                if is_new and jobs.deferrable[j] \
+                        and (t - int(jobs.arrive[j])) < cfg.defer_max_h:
+                    deferred.setdefault(t + 1, []).append(j)
+                    deferred_n += 1
+                else:
+                    jstate[j] = _DROPPED
+                    dropped += 1
+                continue
+            if jstate[j] != _ACTIVE:       # first placement
+                jstate[j] = _ACTIVE
+                jend[j] = t + int(jobs.duration[j])
+                ends.setdefault(int(jend[j]), []).append(j)
+                if jfirst[j] < 0:
+                    jfirst[j] = node
+            jnode[j] = node
+            njobs[node] += 1
+            load_on[node] += jobs.load[j]
+            placed += 1
+        if redo_d:
+            E2 = _pad_bucket(len(redo_d))
+            d2 = np.zeros(E2, np.int32)
+            n2 = np.full(E2, -1, np.int32)
+            d2[:len(redo_d)] = redo_d
+            n2[:len(redo_n)] = redo_n
+            if blind:
+                _, cap_h = _place_blind(d2, n2, cap_h, healthy, rr_ptr,
+                                        spread)
+                cap = jnp.asarray(cap_h, fleet0.capacity.dtype)
+            else:
+                _, cap, _, _, _, _ = _epoch_step(
+                    traces, ridx_d, fleet0.pue, fleet0.power_kw,
+                    fleet0.chips_total, strag,
+                    fleet0.flops_per_j, region_pue_d, jnp.int32(a), cap,
+                    jnp.asarray(healthy), jnp.asarray(d2), jnp.asarray(n2),
+                    statics)
+                cap_h = np.asarray(cap, np.int64)
+
+        # ---- 5. emission accounting ---------------------------------
+        # the spread comparator models the paper's baseline: all nodes on
+        on = (njobs > 0) if cfg.power_off_idle and not spread \
+            else np.ones(N, bool)
+        occ = 1.0 - cap_h / np.maximum(chips_total_h, 1)
+        energy_kwh = power_h * (IDLE_POWER_FRAC
+                                + (1.0 - IDLE_POWER_FRAC) * occ) * on
+        series[t] = float(np.sum(energy_kwh * pue_h * ci_col))
+        emissions += series[t]
+        if record_matrices:
+            util_m[:, t] = load_on
+            on_m[:, t] = on.astype(np.float64)
+
+    # jobs still waiting in the deferral queue when the horizon ends were
+    # never run: account them as dropped so totals reconcile with jobs.n
+    for pending in deferred.values():
+        for j in pending:
+            if jstate[j] == _PENDING:
+                jstate[j] = _DROPPED
+                dropped += 1
+
+    emissions += mig_cost_total
+    return SimResult(emissions_g=emissions, migration_cost_g=mig_cost_total,
+                     rank_sweeps=sweeps, arrivals_placed=placed,
+                     jobs_completed=completed, jobs_dropped=dropped,
+                     jobs_deferred=deferred_n, migrations=migrations,
+                     evictions=evictions, node_log=jnode, first_node=jfirst,
+                     emissions_series=series, util=util_m, on=on_m)
+
+
+def _place_blind(dem: np.ndarray, tgt: np.ndarray, cap: np.ndarray,
+                 healthy: np.ndarray, rr_ptr: list, spread: bool
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Carbon-blind lifecycle comparators: lowest-index first-fit
+    (consolidating), or round-robin from a rotating pointer (spreading,
+    the paper's baseline policy)."""
+    cap = cap.copy()
+    N = cap.shape[0]
+    out = np.full(dem.shape[0], -1, np.int64)
+    for e in range(dem.shape[0]):
+        d = int(dem[e])
+        if d < 0:
+            cap[tgt[e]] -= d
+            out[e] = tgt[e]
+        elif d > 0:
+            feas = np.nonzero((cap >= d) & healthy)[0]
+            if not feas.size:
+                continue
+            if spread:
+                nxt = feas[feas >= rr_ptr[0]]
+                pick = int(nxt[0]) if nxt.size else int(feas[0])
+                rr_ptr[0] = (pick + 1) % N
+            else:
+                pick = int(feas[0])
+            out[e] = pick
+            cap[pick] -= d
+    return out, cap
+
+
+# ---------------------------------------------------------------------------
+# synthetic lifecycle fleet (traces + node arrays)
+# ---------------------------------------------------------------------------
+
+
+def synthetic_lifecycle_fleet(n: int, cfg: SimConfig,
+                              chips_per_node: int = 256
+                              ) -> Tuple[Fleet, np.ndarray, np.ndarray]:
+    """(empty fleet, region CI traces, node->region map) for the simulator.
+
+    Same statistical recipe as ``fleet.synthetic_fleet`` but capacity
+    starts FULL (jobs arrive through the lifecycle) and the traces carry
+    ``history_h`` hours of warm-up for the forecaster."""
+    rng = np.random.default_rng(cfg.seed)
+    regions = list(telemetry.REGIONS.values())
+    ridx = rng.integers(0, len(regions), n)
+    hours = cfg.history_h + cfg.epochs + cfg.horizon_h + 1
+    traces = np.stack([telemetry.hourly_ci(r, hours=hours, seed=cfg.seed + i)
+                       for i, r in enumerate(regions)])
+    fleet = Fleet(
+        ci_now=jnp.asarray(traces[ridx, cfg.history_h], jnp.float32),
+        ci_forecast=jnp.asarray(traces[ridx, cfg.history_h], jnp.float32),
+        pue=jnp.asarray(np.array([r.pue for r in regions])[ridx],
+                        jnp.float32),
+        power_kw=jnp.asarray(
+            chips_per_node * 0.25 * (1 + 0.1 * rng.random(n)), jnp.float32),
+        capacity=jnp.full((n,), chips_per_node, jnp.int32),
+        healthy=jnp.ones((n,), bool),
+        straggler_score=jnp.asarray(
+            np.abs(rng.normal(0, 0.05, n)), jnp.float32),
+        flops_per_j=jnp.asarray(
+            788e9 * (1 + 0.05 * rng.standard_normal(n)), jnp.float32),
+        chips_total=jnp.full((n,), chips_per_node, jnp.int32),
+    )
+    return fleet, traces, ridx
+
+
+# ---------------------------------------------------------------------------
+# the paper experiment as a simulator special case
+# ---------------------------------------------------------------------------
+
+_PAPER_CHIPS = 60      # one unit = 60 servers; the job takes the whole node
+
+
+def paper_scenario_alloc(ci: np.ndarray, pue: np.ndarray, demand: float
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """Scenario C (util, on) matrices via the rolling simulator.
+
+    One 1-epoch job per hour carries the aggregate dynamic demand; weights
+    are CFP-only, so with equal node power and an empty fleet the greedy
+    engine lands each hour's job on argmin(CI x PUE) and powers everything
+    else off — exactly the paper's active-shifting policy, but produced by
+    the same lifecycle code path that runs multi-thousand-node fleets."""
+    N, T = ci.shape
+    cfg = SimConfig(epochs=T, seed=0,
+                    weights=RankWeights(w1=1.0, w2=0.0, w3=0.0, w4=0.0),
+                    engine="full", history_h=0, horizon_h=1,
+                    migration_budget=0, power_off_idle=True)
+    ones = jnp.ones((N,), jnp.float32)
+    fleet = Fleet(
+        ci_now=jnp.asarray(ci[:, 0], jnp.float32),
+        ci_forecast=jnp.asarray(ci[:, 0], jnp.float32),
+        pue=jnp.asarray(pue, jnp.float32),
+        power_kw=ones,
+        capacity=jnp.full((N,), _PAPER_CHIPS, jnp.int32),
+        healthy=jnp.ones((N,), bool),
+        straggler_score=jnp.zeros((N,), jnp.float32),
+        flops_per_j=ones,
+        chips_total=jnp.full((N,), _PAPER_CHIPS, jnp.int32),
+    )
+    jobs = JobSchedule(arrive=np.arange(T),
+                       chips=np.full(T, _PAPER_CHIPS, np.int64),
+                       duration=np.ones(T, np.int64),
+                       load=np.full(T, float(demand)),
+                       deferrable=np.zeros(T, bool))
+    r = simulate_fleet(fleet, ci, np.arange(N), cfg, jobs=jobs,
+                       record_matrices=True)
+    return r.util, r.on

@@ -87,9 +87,11 @@ def _dip_mask(rng: np.random.Generator, hours: int, rate: float,
         elif state == 1.0 and u[t] < p_off:
             state = 0.0
         out[t] = state
-    # smooth edges so dips ramp in/out like real wind fronts
+    # smooth edges so dips ramp in/out like real wind fronts.  Full conv +
+    # centered slice == mode="same" for hours >= kernel size, but stays
+    # (hours,) for shorter traces (mode="same" returns max(M, N) elements).
     k = np.array([0.25, 0.5, 1.0, 0.5, 0.25])
-    out = np.convolve(out, k / k.max(), mode="same").clip(0, 1)
+    out = np.convolve(out, k / k.max(), mode="full")[2:2 + hours].clip(0, 1)
     return out
 
 
@@ -113,11 +115,17 @@ def hourly_ci(profile: RegionProfile, hours: int = HOURS_PER_YEAR,
 
 
 def region_traces(hours: int = HOURS_PER_YEAR, seed: int = 2022,
-                  regions: Tuple[str, ...] = ("ES", "NL", "DE")
+                  regions: Tuple[str, ...] = ("ES", "NL", "DE"),
+                  profiles: Dict[str, RegionProfile] = None
                   ) -> Tuple[np.ndarray, np.ndarray]:
-    """Returns (ci (N, hours), pue (N,)) for the requested regions."""
-    ci = np.stack([hourly_ci(REGIONS[r], hours, seed) for r in regions])
-    pue = np.array([REGIONS[r].pue for r in regions])
+    """Returns (ci (N, hours), pue (N,)) for the requested regions.
+
+    ``profiles`` overrides the module-level ``REGIONS`` table — callers that
+    need what-if traces (e.g. ``scenarios.calibrate_dip_depth``) thread a
+    modified copy through instead of mutating the global."""
+    table = REGIONS if profiles is None else profiles
+    ci = np.stack([hourly_ci(table[r], hours, seed) for r in regions])
+    pue = np.array([table[r].pue for r in regions])
     return ci, pue
 
 

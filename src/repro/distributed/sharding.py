@@ -29,7 +29,8 @@ class Param:
     """Declarative parameter: shape + logical axes + init recipe."""
     shape: Tuple[int, ...]
     axes: Tuple[Optional[str], ...]
-    init: str = "fan_in"        # fan_in | normal | zeros | ones | embed | small
+    init: str = "fan_in"
+    # ^ fan_in | fan_last | normal | zeros | ones | embed | small | s4d | dt
     scale: float = 1.0
     dtype: Any = jnp.bfloat16
 
@@ -164,11 +165,29 @@ def _init_one(p: Param, key) -> jax.Array:
         return jnp.zeros(p.shape, p.dtype)
     if p.init == "ones":
         return jnp.ones(p.shape, p.dtype)
+    if p.init == "s4d":
+        # S4D-real A_log: decay rates log-spaced 1..n along the last axis,
+        # so each state channel owns a distinct timescale (an all-ones
+        # A_log collapses every channel to decay exp(-e·dt) ≈ memoryless).
+        n = p.shape[-1]
+        row = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32) * p.scale)
+        return jnp.broadcast_to(row, p.shape).astype(p.dtype)
+    if p.init == "dt":
+        # Mamba dt_bias: softplus(bias) log-uniform in [1e-3, 0.1]·scale, the
+        # standard step-size init (dt ≈ 1 makes the state forget each token).
+        lo, hi = jnp.log(1e-3), jnp.log(0.1)
+        u = jax.random.uniform(key, p.shape, jnp.float32)
+        dt = jnp.exp(lo + u * (hi - lo)) * p.scale
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(p.dtype)
     fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
     if p.init == "embed":
         std = p.scale
     elif p.init == "small":
         std = 0.02 * p.scale
+    elif p.init == "fan_last":
+        # for (channels, taps)-style weights whose reduction axis is LAST
+        # (depthwise conv): fan is the tap count, not the channel count
+        std = p.scale / math.sqrt(max(p.shape[-1], 1))
     else:  # fan_in
         std = p.scale / math.sqrt(max(fan_in, 1))
     return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(p.dtype)

@@ -53,11 +53,17 @@ def train_loop(arch: str, *, steps: int, batch: int, seq: int,
                ckpt_every: int = 10, data_mesh: int = 1, model_mesh: int = 1,
                injector: Optional[FailureInjector] = None,
                task: str = "copy", microbatches: int = 1,
-               lr: float = 3e-4, log_every: int = 10,
+               lr: Optional[float] = None, log_every: int = 10,
                maizx_place: bool = False, seed: int = 0) -> TrainRun:
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
+    if lr is None:
+        # µP-style width scaling: the 3e-4 production peak is tuned for
+        # d_model ≈ 4096; at the reduced smoke width (d=128) that step size
+        # is below bf16 resolution relative to fan-in-scaled weights, so
+        # reduced runs default to the width-scaled rate (capped at 3e-3).
+        lr = 3e-3 if reduced else 3e-4
     flags = ModelFlags(attn_chunk=min(512, seq), ssm_chunk=32)
     model = build_model(cfg, flags)
     opt_cfg = AdamWConfig(lr_peak=lr, warmup_steps=max(2, steps // 10),

@@ -48,8 +48,11 @@ class Model:
             "ln_f": rmsnorm_template(cfg.d_model),
         }
         if not cfg.tie_embeddings:
+            # zero-init output head: logits start at exactly 0, loss at
+            # ln(V) — random-head miscalibration otherwise adds ~0.5 nats
+            # of noise that swamps early-training loss descent
             t["lm_head"] = Param((cfg.d_model, cfg.vocab), ("fsdp", "vocab"),
-                                 init="fan_in")
+                                 init="zeros")
         return t
 
     def init(self, key) -> Dict[str, Any]:

@@ -105,12 +105,12 @@ def mamba1_template(cfg: ArchConfig) -> Dict[str, Param]:
                       cfg.ssm_conv)
     return {
         "in_proj": Param((D, 2 * di), ("fsdp", "tp")),
-        "conv_w": Param((di, W), ("tp", None), init="fan_in", scale=0.5),
+        "conv_w": Param((di, W), ("tp", None), init="fan_last", scale=0.5),
         "conv_b": Param((di,), ("tp",), init="zeros"),
         "x_proj": Param((di, R + 2 * N), ("tp", None)),
         "dt_proj": Param((R, di), (None, "tp"), init="small"),
-        "dt_bias": Param((di,), ("tp",), init="ones", dtype=jnp.float32),
-        "A_log": Param((di, N), ("tp", None), init="ones", dtype=jnp.float32),
+        "dt_bias": Param((di,), ("tp",), init="dt", dtype=jnp.float32),
+        "A_log": Param((di, N), ("tp", None), init="s4d", dtype=jnp.float32),
         "D_skip": Param((di,), ("tp",), init="ones", dtype=jnp.float32),
         "out_proj": Param((di, D), ("tp", "fsdp")),
     }
@@ -187,10 +187,10 @@ def mamba2_template(cfg: ArchConfig) -> Dict[str, Param]:
     nh = di // cfg.ssm_head_dim
     return {
         "in_proj": Param((D, 2 * di + 2 * N + nh), ("fsdp", "tp")),
-        "conv_w": Param((di, W), ("tp", None), init="fan_in", scale=0.5),
+        "conv_w": Param((di, W), ("tp", None), init="fan_last", scale=0.5),
         "conv_b": Param((di,), ("tp",), init="zeros"),
-        "A_log": Param((nh,), (None,), init="ones", dtype=jnp.float32),
-        "dt_bias": Param((nh,), (None,), init="ones", dtype=jnp.float32),
+        "A_log": Param((nh,), (None,), init="s4d", dtype=jnp.float32),
+        "dt_bias": Param((nh,), (None,), init="dt", dtype=jnp.float32),
         "D_skip": Param((nh,), (None,), init="ones", dtype=jnp.float32),
         "norm_w": Param((di,), ("tp",), init="ones", dtype=jnp.float32),
         "out_proj": Param((di, D), ("tp", "fsdp")),

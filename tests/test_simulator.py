@@ -1,0 +1,148 @@
+"""Rolling fleet simulator: lifecycle parity across engines, scenario
+generators (diurnal/flash-crowd/outage/deferrable), migration cost model,
+and the paper experiment as the N=3/T=8760 special case."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import telemetry
+from repro.core.simulator import (SimConfig, generate_jobs,
+                                  paper_scenario_alloc, simulate_fleet,
+                                  synthetic_lifecycle_fleet)
+
+BASE = SimConfig(epochs=36, seed=11, arrival_rate=8.0, mean_duration_h=8.0,
+                 shortlist=32, history_h=48, horizon_h=12)
+
+
+def _run(cfg, n=192, chips=128, jobs=None):
+    fleet, traces, ridx = synthetic_lifecycle_fleet(n, cfg,
+                                                    chips_per_node=chips)
+    jobs = jobs if jobs is not None else generate_jobs(cfg)
+    return simulate_fleet(fleet, traces, ridx, cfg, jobs=jobs), jobs
+
+
+# ---------------------------------------------------------------------------
+# engine parity on full lifecycle trajectories
+# ---------------------------------------------------------------------------
+
+
+def test_sim_shortlist_matches_full_oracle():
+    cfg = dataclasses.replace(BASE, migration_budget=2, deferrable_frac=0.2,
+                              outage=(0, 12, 6), flash_crowd=(20, 3, 2.5))
+    a, jobs = _run(cfg)
+    b, _ = _run(dataclasses.replace(cfg, engine="full"), jobs=jobs)
+    np.testing.assert_array_equal(a.node_log, b.node_log)
+    np.testing.assert_array_equal(a.first_node, b.first_node)
+    assert a.emissions_g == b.emissions_g
+    assert a.migrations == b.migrations
+    assert a.rank_sweeps < b.rank_sweeps
+
+
+def test_sim_sweeps_amortize_below_one_per_job():
+    """The acceptance-shaped property: releases batched ahead of arrivals
+    keep the engine near one sweep per epoch, far below one per job."""
+    a, _ = _run(BASE)
+    assert a.arrivals_placed > 2 * BASE.epochs
+    assert a.rank_sweeps <= 2 * BASE.epochs
+    assert a.rank_sweeps / a.arrivals_placed < 0.5
+
+
+# ---------------------------------------------------------------------------
+# lifecycle invariants
+# ---------------------------------------------------------------------------
+
+
+def test_sim_capacity_conservation():
+    """Jobs return their chips: with all jobs shorter than the horizon, the
+    fleet ends empty (total completed + dropped == total jobs)."""
+    cfg = dataclasses.replace(BASE, epochs=30, mean_duration_h=3.0)
+    a, jobs = _run(cfg)
+    still_running = jobs.n - a.jobs_completed - a.jobs_dropped
+    assert still_running >= 0
+    # every arrival that landed eventually frees its node: re-running one
+    # epoch longer can only complete more
+    b, _ = _run(dataclasses.replace(cfg, epochs=36), jobs=jobs)
+    assert b.jobs_completed >= a.jobs_completed
+
+
+def test_sim_flash_crowd_raises_arrivals():
+    t0, length, mult = 10, 4, 4.0
+    calm = generate_jobs(BASE)
+    crowd = generate_jobs(dataclasses.replace(
+        BASE, flash_crowd=(t0, length, mult)))
+    in_win = ((crowd.arrive >= t0) & (crowd.arrive < t0 + length)).sum()
+    calm_win = ((calm.arrive >= t0) & (calm.arrive < t0 + length)).sum()
+    assert in_win > 2 * max(calm_win, 1)
+
+
+def test_sim_outage_evicts_and_avoids_region():
+    cfg = dataclasses.replace(BASE, outage=(0, 8, 10),
+                              mean_duration_h=20.0)
+    a, jobs = _run(cfg)
+    assert a.evictions > 0
+    # during the outage no running job sits on region 0
+    _, _, ridx = synthetic_lifecycle_fleet(192, cfg, chips_per_node=128)
+    placed_in_window = (jobs.arrive >= 8) & (jobs.arrive < 18) \
+        & (a.first_node >= 0)
+    assert not np.any(ridx[a.first_node[placed_in_window]] == 0)
+
+
+def test_sim_deferrable_jobs_defer():
+    cfg = dataclasses.replace(BASE, deferrable_frac=1.0, defer_max_h=4)
+    a, _ = _run(cfg)
+    assert a.jobs_deferred > 0
+
+
+def test_sim_migration_budget_and_cost_model():
+    """Migrations only happen when the gCO2 benefit beats the checkpoint
+    cost; the budget caps them per epoch; cost is accounted."""
+    cfg = dataclasses.replace(BASE, migration_budget=3, outage=(0, 6, 6),
+                              mean_duration_h=24.0, epochs=30)
+    a, _ = _run(cfg)
+    assert a.migrations > 0
+    assert a.migrations <= 3 * cfg.epochs
+    assert a.migration_cost_g > 0.0
+    assert a.emissions_g >= a.migration_cost_g
+    none = simulate_fleet(*synthetic_lifecycle_fleet(192, cfg, 128)[:3],
+                          dataclasses.replace(cfg, migration_budget=0))
+    assert none.migrations == 0 and none.migration_cost_g == 0.0
+
+
+def test_sim_beats_carbon_blind_comparators():
+    cfg = dataclasses.replace(BASE, epochs=48, arrival_rate=10.0)
+    a, jobs = _run(cfg, n=256)
+    blind, _ = _run(dataclasses.replace(cfg, engine="blind"), n=256,
+                    jobs=jobs)
+    spread, _ = _run(dataclasses.replace(cfg, engine="spread"), n=256,
+                     jobs=jobs)
+    assert a.emissions_g < blind.emissions_g
+    assert blind.emissions_g < spread.emissions_g
+
+
+# ---------------------------------------------------------------------------
+# the paper experiment through the simulator
+# ---------------------------------------------------------------------------
+
+
+def test_paper_alloc_matches_closed_form():
+    """Scenario C via the simulator == the argmin(CI×PUE) closed form."""
+    ci, pue = telemetry.region_traces(hours=400)
+    util, on = paper_scenario_alloc(ci, pue, 0.5)
+    T = ci.shape[1]
+    best = (ci * pue[:, None]).argmin(axis=0)
+    u2 = np.zeros_like(util)
+    o2 = np.zeros_like(on)
+    u2[best, np.arange(T)] = 0.5
+    o2[best, np.arange(T)] = 1.0
+    np.testing.assert_array_equal(util, u2)
+    np.testing.assert_array_equal(on, o2)
+
+
+@pytest.mark.slow
+def test_paper_scenario_c_within_headline_tolerance():
+    """Acceptance: the N=3/T=8760 simulator configuration reproduces the
+    paper's Scenario C reduction within 0.05 pp of 85.68 %."""
+    from repro.core.scenarios import run_paper_experiment
+    r = run_paper_experiment()
+    assert r.reduction_pct["C"] == pytest.approx(85.68, abs=0.05)

@@ -16,9 +16,11 @@ from repro.serve.engine import ServeEngine
 @pytest.mark.slow
 def test_training_learns_copy_task():
     """The induction task is learnable: loss must drop well below ln(V).
-    (The induction head forms around step ~180 at this scale — measured;
-    loss then falls to the ~0.5·ln(V) copy floor.)"""
-    run = train_loop("granite-3-2b", steps=260, batch=16, seq=64,
+    (With the zero-init LM head, loss starts at exactly ln(V) and every nat
+    of drop is genuine learning; the induction head forms around step ~130
+    at this scale — measured — and loss falls toward the ~0.5·ln(V) copy
+    floor, crossing the -2.0 bar around step ~300.)"""
+    run = train_loop("granite-3-2b", steps=380, batch=16, seq=64,
                      reduced=True, task="copy", log_every=1000, lr=3e-3)
     first = np.mean(run.losses[:5])
     last = np.mean(run.losses[-5:])
