@@ -1,0 +1,185 @@
+"""CI bench-regression gate: compare fresh BENCH artifacts to committed
+baselines and FAIL the lane instead of merely uploading numbers.
+
+Usage (one call per artifact kind):
+
+    python benchmarks/check_regression.py --kind sim \
+        --current BENCH_sim.json \
+        --baseline benchmarks/baselines/BENCH_sim_smoke.json
+    python benchmarks/check_regression.py --kind placement \
+        --current BENCH_placement.json \
+        --baseline benchmarks/baselines/BENCH_placement_smoke.json
+
+Gates (exit 1 on any):
+- **parity breaks**: any parity flag false in the current artifact
+  (shortlist-vs-oracle, scan-vs-host) — the bench itself also exits
+  nonzero, this is belt-and-braces for stale artifacts;
+- **sweeps/job regressions**: current rank-sweep economy worse than the
+  baseline by more than 5 % (the engines are deterministic, so any growth
+  means the shortlist/bound machinery got weaker);
+- **paper drift**: |scenario C − 85.68 %| > 0.01 pp (tighter than the
+  bench's own 0.05 pp sanity bound — a calibration-level gate);
+- **runtime regressions**: any matched runtime metric slower than baseline
+  by more than ``--runtime-tol`` (default 1.5x).  Baselines carry numbers
+  from the machine class that produced them; regenerate them (rerun the
+  bench with the CI env and commit the artifact) when changing runner
+  hardware rather than loosening the tolerance.
+
+Entries are matched by config key (``n``/``epochs``); metrics present in
+only one side are reported as ``skipped`` — so a small CI smoke baseline
+coexists with a full-size committed artifact.  A markdown comparison table
+is appended to ``$GITHUB_STEP_SUMMARY`` when set, and always printed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Iterator, Optional, Tuple
+
+SWEEP_TOL = 1.05
+PAPER_PCT = 85.68
+PAPER_DRIFT_PP = 0.01
+
+OK, FAIL, SKIP = "ok", "FAIL", "skipped"
+
+
+class Table:
+    def __init__(self) -> None:
+        self.rows = []
+        self.failures = []
+
+    def add(self, metric: str, base, cur, status: str, note: str = ""):
+        self.rows.append((metric, base, cur, status, note))
+        if status == FAIL:
+            self.failures.append(f"{metric}: {note or f'{base} -> {cur}'}")
+
+    def check_ratio(self, metric: str, base: Optional[float],
+                    cur: Optional[float], tol: float, lower_is_better=True):
+        if base is None or cur is None:
+            self.add(metric, base, cur, SKIP, "missing on one side")
+            return
+        if base <= 0:
+            ratio = float("inf") if cur > 0 else 1.0
+        else:
+            ratio = cur / base
+        bad = ratio > tol if lower_is_better else ratio < 1.0 / tol
+        self.add(metric, round(base, 3), round(cur, 3),
+                 FAIL if bad else OK, f"ratio {ratio:.2f} (tol {tol}x)")
+
+    def check_flag(self, metric: str, cur: Optional[bool]):
+        if cur is None:
+            self.add(metric, "-", None, SKIP, "missing")
+        else:
+            self.add(metric, "-", cur, OK if cur else FAIL,
+                     "" if cur else "parity flag is false")
+
+    def markdown(self, title: str) -> str:
+        lines = [f"### bench regression: {title}", "",
+                 "| metric | baseline | current | status | note |",
+                 "|---|---|---|---|---|"]
+        for m, b, c, s, note in self.rows:
+            icon = {OK: "✅", FAIL: "❌", SKIP: "⏭️"}[s]
+            lines.append(f"| {m} | {b} | {c} | {icon} {s} | {note} |")
+        return "\n".join(lines) + "\n"
+
+
+def _entries(doc: dict) -> Iterator[Tuple[tuple, dict]]:
+    for e in doc.get("configs", []):
+        yield (e.get("n"), e.get("epochs")), e
+
+
+def _match(base_doc: dict, cur_doc: dict) -> Iterator[Tuple[tuple, dict,
+                                                            dict]]:
+    base = dict(_entries(base_doc))
+    for key, cur in _entries(cur_doc):
+        if key in base:
+            yield key, base[key], cur
+
+
+def check_placement(base: dict, cur: dict, t: Table, tol: float) -> None:
+    for key, b, c in _match(base, cur):
+        tag = f"n={key[0]}"
+        t.check_flag(f"{tag} parity",
+                     c.get("full_rerank", {}).get("parity"))
+        t.check_ratio(f"{tag} engine sweeps",
+                      b.get("engine", {}).get("rank_sweeps"),
+                      c.get("engine", {}).get("rank_sweeps"), SWEEP_TOL)
+        t.check_ratio(f"{tag} engine us/call",
+                      b.get("engine", {}).get("us_per_call"),
+                      c.get("engine", {}).get("us_per_call"), tol)
+
+
+def check_sim(base: dict, cur: dict, t: Table, tol: float) -> None:
+    for key, b, c in _match(base, cur):
+        tag = f"n={key[0]}/t={key[1]}"
+        t.check_flag(f"{tag} oracle parity", c.get("parity"))
+        t.check_flag(f"{tag} scan parity",
+                     c.get("scan", {}).get("parity"))
+        t.check_ratio(f"{tag} sweeps/job", b.get("sweeps_per_job"),
+                      c.get("sweeps_per_job"), SWEEP_TOL)
+        t.check_ratio(f"{tag} host us/epoch", b.get("host_us_per_epoch"),
+                      c.get("host_us_per_epoch"), tol)
+        t.check_ratio(f"{tag} scan us/epoch",
+                      b.get("scan", {}).get("us_per_epoch_warm"),
+                      c.get("scan", {}).get("us_per_epoch_warm"), tol)
+    if "long_run" in cur:
+        t.check_flag("long_run scan parity",
+                     cur["long_run"].get("parity"))
+        sp = cur["long_run"].get("speedup")
+        t.add("long_run speedup", ">=10x", round(sp, 1) if sp else None,
+              OK if (sp or 0) >= 10.0 else FAIL, "scan vs host at T=8760")
+    pct = cur.get("paper_scenario_c_pct")
+    if pct is None:
+        t.add("paper scenario C", PAPER_PCT, None, SKIP, "missing")
+    else:
+        drift = abs(pct - PAPER_PCT)
+        t.add("paper scenario C", PAPER_PCT, round(pct, 4),
+              FAIL if drift > PAPER_DRIFT_PP else OK,
+              f"drift {drift:.4f}pp (tol {PAPER_DRIFT_PP}pp)")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--kind", choices=("sim", "placement"), required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--runtime-tol", type=float, default=1.5)
+    args = ap.parse_args()
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    t = Table()
+    for name, doc in (("current", cur), ("baseline", base)):
+        v = doc.get("schema_version")
+        if v != 2:
+            t.add(f"{name} schema_version", 2, v, FAIL,
+                  "regenerate the artifact with benchmarks/run.py")
+    if not t.failures:
+        if args.kind == "placement":
+            check_placement(base, cur, t, args.runtime_tol)
+        else:
+            check_sim(base, cur, t, args.runtime_tol)
+        if not t.rows:
+            t.add("matched entries", "-", 0, FAIL,
+                  "no baseline/current config overlap — wrong baseline "
+                  "file or bench env?")
+    md = t.markdown(f"{args.kind} ({args.current} vs {args.baseline})")
+    print(md)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(md + "\n")
+    if t.failures:
+        print("REGRESSION GATE FAILED:", file=sys.stderr)
+        for line in t.failures:
+            print(f"  - {line}", file=sys.stderr)
+        return 1
+    print("regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

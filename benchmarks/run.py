@@ -28,6 +28,24 @@ import numpy as np
 
 ROWS = []
 
+# BENCH_*.json artifacts carry this schema so benchmarks/check_regression.py
+# can refuse to compare incompatible layouts; bump on breaking changes
+SCHEMA_VERSION = 2
+
+_REPO_ROOT = os.path.dirname(os.path.abspath(os.path.dirname(__file__)))
+
+
+def write_artifact(name: str, payload: dict, config: dict) -> None:
+    """Write a BENCH artifact at the repo root (NOT the current working
+    directory — ``python path/to/run.py`` from anywhere must land in the
+    same place CI and check_regression.py look), stamped with the schema
+    version and an echo of the effective bench configuration."""
+    payload = {"schema_version": SCHEMA_VERSION, "config": config, **payload}
+    out = os.path.join(_REPO_ROOT, name)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out}")
+
 
 def row(name: str, us_per_call: float, derived: str = "") -> None:
     ROWS.append((name, us_per_call, derived))
@@ -152,20 +170,50 @@ def bench_placement_scale():
                     f"placement parity broken at n={n}: shortlist != "
                     f"full re-rank")
         artifact.append(entry)
-    out = os.path.join(os.path.dirname(__file__), "..",
-                       "BENCH_placement.json")
-    with open(out, "w") as f:
-        json.dump(artifact, f, indent=2)
+    write_artifact("BENCH_placement.json", {"configs": artifact},
+                   {"ns": list(ns), "jobs": J, "demand_chips": d,
+                    "shortlist": K})
+
+
+def _scan_vs_host_parity(host, scan):
+    """Equivalence contract of the scanned core (see simulate_fleet_scan):
+    placements + counters exact, f64-vs-f32 accounting within rtol."""
+    counters = ("rank_sweeps", "arrivals_placed", "jobs_completed",
+                "jobs_dropped", "jobs_deferred", "migrations", "evictions")
+    exact = (np.array_equal(host.node_log, scan.node_log)
+             and np.array_equal(host.first_node, scan.first_node)
+             and all(getattr(host, f) == getattr(scan, f)
+                     for f in counters))
+    rel = float(abs(host.emissions_g - scan.emissions_g)
+                / max(abs(host.emissions_g), 1e-9))
+    return bool(exact and rel <= 1e-4), rel
+
+
+def _time_scan(fleet, traces, ridx, cfg, jobs):
+    """(first_call_s, warm_s, result): cold call pays the lax.scan compile,
+    second call is the steady-state trajectory time.  simulate_fleet_scan
+    blocks on the result internally, so perf_counter brackets are tight."""
+    from repro.core.simulator import simulate_fleet_scan
+    t0 = time.perf_counter()
+    simulate_fleet_scan(fleet, traces, ridx, cfg, jobs=jobs)
+    first_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    s = simulate_fleet_scan(fleet, traces, ridx, cfg, jobs=jobs)
+    return first_s, time.perf_counter() - t0, s
 
 
 def bench_sim_scale():
     """Rolling lifecycle fleet simulator (arrivals + departures + migration):
-    rank sweeps per job, bit-parity vs the lifecycle full-rerank oracle, and
-    emissions vs the two carbon-blind comparators.  N list / epoch count
-    overridable via SIM_NS / SIM_EPOCHS (CI smoke sets small values).
-    Emits BENCH_sim.json; exits nonzero on parity break, sweeps/job >= 0.2,
-    or the paper special case drifting beyond 0.05 pp of 85.68 % — the same
-    gating contract as the placement bench."""
+    rank sweeps per job, bit-parity vs the lifecycle full-rerank oracle,
+    scanned-core (lax.scan) parity + throughput vs the host loop, and
+    emissions vs the two carbon-blind comparators.
+
+    Env knobs: SIM_NS / SIM_EPOCHS size the parity study (CI smoke sets
+    small values); SIM_LONG_EPOCHS (default 8760, 0 disables) runs the
+    year-scale N=SIM_LONG_NS throughput comparison whose >= 10x speedup the
+    scanned core must deliver.  Emits BENCH_sim.json; exits nonzero on any
+    parity break, sweeps/job >= 0.2, paper drift > 0.05 pp, or (long run
+    enabled) scan speedup < 10x."""
     import dataclasses
     from repro.core.scenarios import run_paper_experiment
     from repro.core.simulator import (SimConfig, generate_jobs,
@@ -173,6 +221,8 @@ def bench_sim_scale():
                                       synthetic_lifecycle_fleet)
     ns = tuple(int(x) for x in os.environ.get("SIM_NS", "4096").split(","))
     epochs = int(os.environ.get("SIM_EPOCHS", "168"))
+    long_epochs = int(os.environ.get("SIM_LONG_EPOCHS", "8760"))
+    long_n = int(os.environ.get("SIM_LONG_NS", "4096"))
     artifact = {"configs": []}
     for n in ns:
         cfg = SimConfig(epochs=epochs, seed=1, arrival_rate=12.0,
@@ -192,7 +242,8 @@ def bench_sim_scale():
                  "arrivals_placed": int(a.arrivals_placed),
                  "sweeps_per_job": spj,
                  "migrations": int(a.migrations),
-                 "emissions_g": a.emissions_g}
+                 "emissions_g": a.emissions_g,
+                 "host_us_per_epoch": us}
         b = simulate_fleet(fleet, traces, ridx,
                            dataclasses.replace(cfg, engine="full"),
                            jobs=jobs)
@@ -202,6 +253,18 @@ def bench_sim_scale():
             f"sweeps={b.rank_sweeps};parity={parity}")
         entry["oracle_rank_sweeps"] = int(b.rank_sweeps)
         entry["parity"] = parity
+        # scanned core: compile+run, then steady state
+        first_s, warm_s, s = _time_scan(fleet, traces, ridx, cfg, jobs)
+        scan_us = warm_s * 1e6 / max(epochs, 1)
+        scan_parity, rel = _scan_vs_host_parity(a, s)
+        row(f"sim_scan_n{n}", scan_us,
+            f"first_call_s={first_s:.2f};parity={scan_parity};"
+            f"emissions_rel_err={rel:.2e};"
+            f"speedup={us / max(scan_us, 1e-9):.1f}x")
+        entry["scan"] = {"us_per_epoch_warm": scan_us,
+                         "first_call_s": first_s,
+                         "parity": scan_parity,
+                         "emissions_rel_err": rel}
         for comp in ("blind", "spread"):
             c = simulate_fleet(fleet, traces, ridx,
                                dataclasses.replace(cfg, engine=comp),
@@ -212,17 +275,49 @@ def bench_sim_scale():
         artifact["configs"].append(entry)
         if not parity:
             raise SystemExit(f"sim lifecycle parity broken at n={n}")
+        if not scan_parity:
+            raise SystemExit(f"sim scan-vs-host parity broken at n={n}")
         if spj >= 0.2:
             raise SystemExit(
                 f"sim sweeps/job {spj:.3f} >= 0.2 at n={n}")
+    if long_epochs > 0:
+        cfg = SimConfig(epochs=long_epochs, seed=1, arrival_rate=12.0,
+                        mean_duration_h=12.0, migration_budget=2,
+                        deferrable_frac=0.1, shortlist=64)
+        fleet, traces, ridx = synthetic_lifecycle_fleet(long_n, cfg)
+        jobs = generate_jobs(cfg)
+        first_s, scan_s, s = _time_scan(fleet, traces, ridx, cfg, jobs)
+        t0 = time.perf_counter()
+        a = simulate_fleet(fleet, traces, ridx, cfg, jobs=jobs)
+        host_s = time.perf_counter() - t0
+        scan_parity, rel = _scan_vs_host_parity(a, s)
+        speedup = host_s / max(scan_s, 1e-9)
+        row(f"sim_scan_long_n{long_n}_t{long_epochs}",
+            scan_s * 1e6 / long_epochs,
+            f"host_us_per_epoch={host_s * 1e6 / long_epochs:.1f};"
+            f"speedup={speedup:.1f}x;parity={scan_parity}")
+        artifact["long_run"] = {
+            "n": long_n, "epochs": long_epochs, "jobs": int(jobs.n),
+            "host_s": host_s, "scan_warm_s": scan_s,
+            "scan_first_call_s": first_s,
+            "host_us_per_epoch": host_s * 1e6 / long_epochs,
+            "scan_us_per_epoch_warm": scan_s * 1e6 / long_epochs,
+            "speedup": speedup, "parity": scan_parity,
+            "emissions_rel_err": rel}
+        if not scan_parity:
+            raise SystemExit("sim scan-vs-host parity broken on long run")
+        if speedup < 10.0:
+            raise SystemExit(
+                f"scanned core speedup {speedup:.1f}x < 10x at "
+                f"N={long_n}/T={long_epochs}")
     r = run_paper_experiment()
     drift = abs(r.reduction_pct["C"] - 85.68)
     row("sim_paper_scenario_c", 0.0,
         f"got={r.reduction_pct['C']:.3f}%;paper=85.68%;drift={drift:.3f}pp")
     artifact["paper_scenario_c_pct"] = r.reduction_pct["C"]
-    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_sim.json")
-    with open(out, "w") as f:
-        json.dump(artifact, f, indent=2)
+    write_artifact("BENCH_sim.json", artifact,
+                   {"ns": list(ns), "epochs": epochs,
+                    "long_epochs": long_epochs, "long_n": long_n})
     if drift > 0.05:
         raise SystemExit(
             f"paper scenario C drifted {drift:.3f}pp from 85.68%")

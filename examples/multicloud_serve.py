@@ -68,6 +68,9 @@ for b in range(N_BATCHES):
     pl = place_events(region_fleet(b, capacity), demands, targets,
                       engine="shortlist", shortlist=2)
     prev_node = int(pl.node[1])
+    if prev_node < 0:   # -1 would wrap the capacity index + region label
+        raise SystemExit(f"batch {b} unplaceable: no region has "
+                         f"{BATCH_SLOTS} free slots")
     capacity = capacity.at[int(targets[0])].add(
         BATCH_SLOTS if int(targets[0]) >= 0 else 0)
     capacity = capacity.at[prev_node].add(-BATCH_SLOTS)

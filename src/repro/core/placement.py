@@ -68,10 +68,21 @@ epoch regardless of how many jobs depart.  Bit-parity with the lifecycle
 oracle (``place_lifecycle_full_rerank``) is preserved because every event
 either reuses the exact shared scoring graph or triggers the same masked
 argmin the oracle computes.
+
+Because leading releases on a dirty engine are pure *commutative* capacity
+edits (integer adds; ``cap_max`` is a running max whose final value is
+order-independent), callers may batch them in any order — the scanned
+simulator (``repro.core.simulator.simulate_fleet_scan``) relies on this to
+feed fixed-layout padded event buffers from inside ``lax.scan``.  Both
+engines are pure jax control flow (``lax.switch`` over the event sign +
+``lax.cond`` for the sweep fallback), so they trace unchanged inside
+``scan``/``vmap``; zero-demand events are exact no-ops, which makes
+padding free.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Optional
 
 import jax
@@ -176,7 +187,10 @@ def place_jobs_full_rerank(fleet: Fleet, demands: jax.Array,
 def place_lifecycle_full_rerank(fleet: Fleet, demands: jax.Array,
                                 nodes: jax.Array,
                                 weights: RankWeights = RankWeights(),
-                                horizon_h: float = 1.0) -> PlacementResult:
+                                horizon_h: float = 1.0, *,
+                                capacity: Optional[jax.Array] = None,
+                                n_events: Optional[jax.Array] = None
+                                ) -> PlacementResult:
     """Lifecycle oracle over an event stream, O(arrivals · N).
 
     ``demands[e] > 0``: arrival — full rescore, masked argmin, land the job.
@@ -185,9 +199,18 @@ def place_lifecycle_full_rerank(fleet: Fleet, demands: jax.Array,
     ``demands[e] == 0``: no-op (padding).
 
     Output ``node[e]`` is the chosen node for arrivals (-1 if unplaceable),
-    the credited node for releases, and -1 for no-ops."""
+    the credited node for releases, and -1 for no-ops.
+
+    ``capacity`` splits the scoring snapshot from the loop's starting
+    capacity: leading releases are commutative capacity edits, so the
+    scanned simulator applies them as one scatter and starts the loop at
+    ``capacity`` while normalizers stay frozen at the pre-release
+    ``fleet.capacity``.  ``n_events`` (a traced scalar) bounds the loop to
+    the first ``n_events`` entries — the caller asserts the rest are no-op
+    padding, which the loop would skip anyway, so truncation is exact."""
     E = demands.shape[0]
     ctx = frozen_ctx(fleet, weights, horizon_h)
+    cap0 = fleet.capacity if capacity is None else capacity
     healthy = fleet.healthy
 
     def body(e, state):
@@ -207,18 +230,19 @@ def place_lifecycle_full_rerank(fleet: Fleet, demands: jax.Array,
         def noop(cap):
             return jnp.int32(0), jnp.bool_(False), sweeps
 
-        chosen, ok, sweeps = jax.lax.cond(
-            d > 0, arrival,
-            lambda c: jax.lax.cond(d < 0, release, noop, c), cap)
+        # flat event dispatch: sign(d) + 1 -> release | noop | arrival
+        chosen, ok, sweeps = jax.lax.switch(
+            jnp.sign(d) + 1, (release, noop, arrival), cap)
         # one formula for both directions: arrivals subtract d > 0,
         # releases subtract d < 0 (i.e. credit chips back)
         cap = cap.at[chosen].add(jnp.where(ok, -d, 0))
         out = out.at[e].set(jnp.where(ok, chosen, -1))
         return cap, out, sweeps
 
-    init = (fleet.capacity, jnp.full((E,), -1, jnp.int32),
+    init = (cap0, jnp.full((E,), -1, jnp.int32),
             jnp.zeros((), jnp.int32))
-    cap, out, sweeps = jax.lax.fori_loop(0, E, body, init)
+    cap, out, sweeps = jax.lax.fori_loop(
+        0, E if n_events is None else n_events, body, init)
     return PlacementResult(node=out,
                            scores=_ctx_scores(cap, ctx, weights),
                            capacity=cap, n_sweeps=sweeps)
@@ -244,7 +268,10 @@ def place_lifecycle_shortlist(fleet: Fleet, demands: jax.Array,
                               horizon_h: float = 1.0, *,
                               shortlist: int = 32,
                               use_kernel: bool = False,
-                              interpret: Optional[bool] = None
+                              interpret: Optional[bool] = None,
+                              capacity: Optional[jax.Array] = None,
+                              n_events: Optional[jax.Array] = None,
+                              eager_sweep: bool = False
                               ) -> PlacementResult:
     """Shortlist-greedy lifecycle placement, bit-identical to the oracle.
 
@@ -261,12 +288,31 @@ def place_lifecycle_shortlist(fleet: Fleet, demands: jax.Array,
     O(1) capacity edits and the first arrival performs the epoch's lazy
     initial sweep.  Releases on shortlist nodes are rescored in O(1);
     releases outside the shortlist re-dirty the epoch (their score fell
-    below what the bound can certify — see module docstring)."""
+    below what the bound can certify — see module docstring).
+
+    ``capacity``/``n_events``: see ``place_lifecycle_full_rerank`` — they
+    let the scanned simulator pre-apply an epoch's (commutative) leading
+    releases as one scatter while the frozen normalizers still come from
+    the pre-release ``fleet.capacity`` snapshot, exactly as if the
+    releases had streamed through a dirty engine, and truncate the loop at
+    the compacted event count.
+
+    ``eager_sweep`` hoists the epoch's first sweep out of the event loop:
+    before any sweep an *arrival-only* stream cannot have changed capacity
+    (placements require a sweep first — the engine starts dirty — and
+    failed arrivals edit nothing), so ``sweeps == 0`` certifies
+    ``cap == capacity`` and the pre-computed sweep of the starting capacity
+    is exact.  This keeps ``lax.top_k`` out of the loop's conditionals,
+    where XLA:CPU lowers it as a full sort (~50x slower) — the decisive
+    win for the scanned simulator.  Only valid for streams with no release
+    events (the scanned core's layout); placements, sweep counts and all
+    tie-breaks are unchanged."""
     N, E = fleet.n, demands.shape[0]
     K = min(max(shortlist, 1), N)
     full_cover = K >= N          # shortlist == whole fleet: bound unused
     INF = jnp.float32(jnp.inf)
     ctx = frozen_ctx(fleet, weights, horizon_h)
+    cap0 = fleet.capacity if capacity is None else capacity
     # health is a HARD feasibility constraint (an outaged node is not a
     # candidate, period — the soft sched-weight penalty only biases);
     # static per call, so it composes with the bound argument unchanged
@@ -298,6 +344,10 @@ def place_lifecycle_shortlist(fleet: Fleet, demands: jax.Array,
         if full_cover:
             return cand_s[:K], cand_i[:K], INF, jnp.int32(N)
         return cand_s[:K], cand_i[:K], cand_s[K], cand_i[K]
+
+    # the epoch's first sweep, hoisted to the top level where lax.top_k
+    # takes XLA:CPU's fast path (see docstring); exact while sweeps == 0
+    eager = sweep_topk(cap0) if eager_sweep else None
 
     karange = jnp.arange(K)
 
@@ -358,13 +408,12 @@ def place_lifecycle_shortlist(fleet: Fleet, demands: jax.Array,
                         jnp.where(karange == kbest, new_s, sl_s), sl_i,
                         bound_s, bound_i, cap_max, sweeps, jnp.bool_(False))
 
-            def from_sweep(op):
-                """Fresh O(N) sweep: place this job exactly, open a new
-                (clean) epoch.  The shortlist/bound come from the sweep's
-                pre-placement top-k; the landed node's entry is patched in
-                place."""
+            def land_from(swept, op):
+                """Place this job from a fresh sweep's (scores, top-k) and
+                open a new (clean) epoch; the landed node's shortlist entry
+                is patched in place."""
+                scores, cand_s, cand_i = swept
                 cap, _, _, _, _, _, sweeps, _ = op
-                scores, cand_s, cand_i = sweep_topk(cap)
                 masked = jnp.where((cap >= d) & healthy, scores, INF)
                 best = jnp.argmin(masked).astype(jnp.int32)
                 ok = jnp.isfinite(masked[best])
@@ -374,6 +423,18 @@ def place_lifecycle_shortlist(fleet: Fleet, demands: jax.Array,
                 sl_s = jnp.where(ok & (sl_i == best), new_s, sl_s)
                 return (best, ok, sl_s, sl_i, bound_s, bound_i,
                         jnp.max(hcap(cap)), sweeps + 1, jnp.bool_(False))
+
+            def from_sweep(op):
+                """Fresh O(N) sweep: exact placement from the full masked
+                argmin.  With ``eager_sweep``, the first sweep reuses the
+                hoisted top-level sweep (``sweeps == 0`` certifies the
+                capacity is untouched)."""
+                if eager is None:
+                    return land_from(sweep_topk(op[0]), op)
+                return jax.lax.cond(
+                    op[6] == 0,
+                    functools.partial(land_from, eager),
+                    lambda o: land_from(sweep_topk(o[0]), o), op)
 
             def unplaceable(op):
                 cap, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps, dy = op
@@ -385,21 +446,22 @@ def place_lifecycle_shortlist(fleet: Fleet, demands: jax.Array,
                 lambda o: jax.lax.cond(dead, unplaceable, from_sweep, o),
                 op)
 
+        # flat event dispatch: sign(d) + 1 -> release | noop | arrival
         (chosen, ok, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps,
-         dirty) = jax.lax.cond(
-            d > 0, arrival,
-            lambda o: jax.lax.cond(d < 0, release, noop, o), op)
+         dirty) = jax.lax.switch(
+            jnp.sign(d) + 1, (release, noop, arrival), op)
         # arrivals subtract d > 0; releases subtract d < 0 (credit)
         cap = cap.at[chosen].add(jnp.where(ok, -d, 0))
         out = out.at[e].set(jnp.where(ok, chosen, -1))
         return (cap, out, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps,
                 dirty)
 
-    state = (fleet.capacity, jnp.full((E,), -1, jnp.int32),
+    state = (cap0, jnp.full((E,), -1, jnp.int32),
              jnp.full((K,), INF), jnp.full((K,), N, jnp.int32),
-             INF, jnp.int32(N), jnp.max(hcap(fleet.capacity)),
+             INF, jnp.int32(N), jnp.max(hcap(cap0)),
              jnp.zeros((), jnp.int32), jnp.bool_(True))
-    out_state = jax.lax.fori_loop(0, E, body, state)
+    out_state = jax.lax.fori_loop(
+        0, E if n_events is None else n_events, body, state)
     cap, out, sweeps = out_state[0], out_state[1], out_state[7]
     return PlacementResult(node=out,
                            scores=_ctx_scores(cap, ctx, weights),

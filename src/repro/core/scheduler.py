@@ -141,7 +141,8 @@ def place_events(fleet: Fleet, demands: jax.Array, nodes: jax.Array,
                  weights: RankWeights = RankWeights(),
                  horizon_h: float = 1.0, *,
                  engine: str = "shortlist", shortlist: int = 32,
-                 use_kernel: bool = False) -> Placement:
+                 use_kernel: bool = False,
+                 interpret: Optional[bool] = None) -> Placement:
     """Lifecycle placement over an interleaved event stream.
 
     ``demands[e] > 0`` is an arrival (greedily placed, like ``place_jobs``);
@@ -151,11 +152,16 @@ def place_events(fleet: Fleet, demands: jax.Array, nodes: jax.Array,
     absorbs with release-aware epoch invalidation while staying bit-exact
     to the full-rerank oracle (``engine="full"``) — see
     ``repro.core.placement``.  This is the per-epoch entry point of the
-    rolling fleet simulator (``repro.core.simulator``)."""
+    rolling fleet simulator (``repro.core.simulator``); the scan-compiled
+    core (``simulator.simulate_fleet_scan``) drives the same engines inside
+    ``lax.scan`` with pre-applied release credits (see
+    ``placement.place_lifecycle_shortlist``'s ``capacity``/``eager_sweep``
+    contract).  ``interpret`` forces/disables Pallas
+    interpret mode for ``use_kernel=True`` (None = auto by backend)."""
     if engine == "shortlist":
         r = placement.place_lifecycle_shortlist(
             fleet, demands, nodes, weights, horizon_h, shortlist=shortlist,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, interpret=interpret)
     elif engine == "full":
         r = placement.place_lifecycle_full_rerank(fleet, demands, nodes,
                                                   weights, horizon_h)

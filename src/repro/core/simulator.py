@@ -37,6 +37,16 @@ trajectories (asserted by the lifecycle parity tests and the
 per hour carrying the paper's aggregate demand, CFP-only weights, idle
 power-off — reproducing Scenario C's (util, on) matrices through the same
 code path that runs 65k-node fleets (see ``scheduler.scenario_c_alloc``).
+
+**Two drivers, one epoch graph.**  ``simulate_fleet`` is the host loop:
+one jitted ``_epoch_step`` dispatch per epoch, python job bookkeeping —
+the reference oracle.  ``simulate_fleet_scan`` compiles the WHOLE
+trajectory as one ``lax.scan`` over a fixed-capacity job-slot table and
+padded event buffers (``ScanPlan``), sharing ``_place_epoch`` and every
+policy expression with the host path so placements and counters match the
+oracle exactly (emissions to f32 tolerance; year-scale runs go from
+minutes to seconds — see EXPERIMENTS.md §Scanned core and BENCH_sim.json's
+``long_run``).
 """
 from __future__ import annotations
 
@@ -162,13 +172,49 @@ class SimResult:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("statics",))
-def _epoch_step(traces, ridx, pue, power_kw, chips_total, straggler,
+def _place_epoch(pue, power_kw, chips_total, straggler, flops_per_j,
+                 ci_now, ci_fc, cap_ctx, cap_start, healthy, demands, nodes,
+                 statics, n_events=None, eager_sweep=False):
+    """Build the epoch Fleet and run the lifecycle placement engine.
+
+    ``cap_ctx`` is the capacity snapshot the frozen normalizers see;
+    ``cap_start`` is where the event loop begins.  The host loop passes the
+    same array for both (releases stream through the engine); the scanned
+    core pre-applies an epoch's leading releases as one scatter (they are
+    commutative capacity edits on a dirty engine) and passes the
+    post-release capacity as ``cap_start`` — identical final state, fewer
+    loop iterations."""
+    engine, shortlist, use_kernel, weights = statics[:4]
+    fleet = Fleet(ci_now=ci_now.astype(jnp.float32),
+                  ci_forecast=ci_fc.astype(jnp.float32),
+                  pue=pue, power_kw=power_kw, capacity=cap_ctx,
+                  healthy=healthy, straggler_score=straggler,
+                  flops_per_j=flops_per_j, chips_total=chips_total)
+    if engine == "full":
+        r = place_lifecycle_full_rerank(fleet, demands, nodes, weights,
+                                        horizon_h=1.0, capacity=cap_start,
+                                        n_events=n_events)
+    else:
+        r = place_lifecycle_shortlist(fleet, demands, nodes, weights,
+                                      horizon_h=1.0, shortlist=shortlist,
+                                      use_kernel=use_kernel,
+                                      capacity=cap_start,
+                                      n_events=n_events,
+                                      eager_sweep=eager_sweep)
+    return r.node, r.capacity, r.n_sweeps
+
+
+def _epoch_core(traces, ridx, pue, power_kw, chips_total, straggler,
                 flops_per_j, region_pue, t, cap, healthy, demands, nodes,
                 statics):
     """One simulator epoch on-device: slice the CI column, refresh the FCFP
     forecast, build the Fleet and run the lifecycle placement engine.
-    ``straggler`` already carries the per-epoch consolidation bonus."""
+    ``straggler`` already carries the per-epoch consolidation bonus.
+
+    The scanned core (``simulate_fleet_scan``) runs the same pieces —
+    ``_place_epoch`` plus the identical CI/forecast expressions — inside
+    ``lax.scan``, with the forecast batched over epochs up front (bitwise
+    equal: it only depends on the static traces)."""
     (engine, shortlist, use_kernel, weights, horizon_h, history_h,
      use_forecast, defer_max_h) = statics
     ci_now_r = jax.lax.dynamic_slice_in_dim(traces, t, 1, axis=1)[:, 0]
@@ -184,20 +230,24 @@ def _epoch_step(traces, ridx, pue, power_kw, chips_total, straggler,
     else:
         ci_fc = ci_now
         fut_rate = jnp.float32(jnp.inf)
-    fleet = Fleet(ci_now=ci_now.astype(jnp.float32),
-                  ci_forecast=ci_fc.astype(jnp.float32),
-                  pue=pue, power_kw=power_kw, capacity=cap,
-                  healthy=healthy, straggler_score=straggler,
-                  flops_per_j=flops_per_j, chips_total=chips_total)
-    if engine == "full":
-        r = place_lifecycle_full_rerank(fleet, demands, nodes, weights,
-                                        horizon_h=1.0)
-    else:
-        r = place_lifecycle_shortlist(fleet, demands, nodes, weights,
-                                      horizon_h=1.0, shortlist=shortlist,
-                                      use_kernel=use_kernel)
+    node, cap_out, n_sweeps = _place_epoch(
+        pue, power_kw, chips_total, straggler, flops_per_j, ci_now, ci_fc,
+        cap, cap, healthy, demands, nodes, statics)
     cur_rate = jnp.min(jnp.where(healthy, ci_now * pue, jnp.inf))
-    return r.node, r.capacity, r.n_sweeps, ci_now, cur_rate, fut_rate
+    return node, cap_out, n_sweeps, ci_now, cur_rate, fut_rate
+
+
+_epoch_step = jax.jit(_epoch_core, static_argnames=("statics",))
+
+
+def _region_pue(n_regions: int, ridx: np.ndarray, pue) -> np.ndarray:
+    """Representative PUE per region row; regions with no nodes get +inf so
+    they can't win the deferral policy's "greenest upcoming hour" min.
+    Shared by the host loop and the scanned core — the deferral policy's
+    region-PUE convention must stay identical across drivers."""
+    out = np.full(n_regions, np.inf)
+    np.minimum.at(out, ridx, np.asarray(pue, np.float64))
+    return out
 
 
 def _pad_bucket(n: int) -> int:
@@ -236,11 +286,8 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
 
     traces = jnp.asarray(region_ci, jnp.float32)
     ridx_d = jnp.asarray(ridx, jnp.int32)
-    # representative PUE per region row; regions with no nodes get +inf so
-    # they can't win the deferral policy's "greenest upcoming hour" min
-    region_pue = np.full(region_ci.shape[0], np.inf)
-    np.minimum.at(region_pue, ridx, np.asarray(fleet0.pue, np.float64))
-    region_pue_d = jnp.asarray(region_pue, jnp.float32)
+    region_pue_d = jnp.asarray(
+        _region_pue(region_ci.shape[0], ridx, fleet0.pue), jnp.float32)
 
     # host mirrors for policy + accounting (f64)
     pue_h = np.asarray(fleet0.pue, np.float64)
@@ -485,6 +532,470 @@ def _place_blind(dem: np.ndarray, tgt: np.ndarray, cap: np.ndarray,
             out[e] = pick
             cap[pick] -= d
     return out, cap
+
+
+# ---------------------------------------------------------------------------
+# scan-compiled simulator core: the whole trajectory as ONE lax.scan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanPlan:
+    """Static shapes for the scanned core, derived from the job schedule.
+
+    Every per-epoch buffer is padded to a *sound* upper bound computed on
+    the host, so ``lax.scan`` compiles one fixed-shape trajectory:
+
+    - ``slots``: fixed-capacity job table size — interval bound on
+      concurrently-active jobs (a job can hold chips only during
+      ``[arrive, arrive + defer_slack + duration)``; drops/evictions only
+      shrink activity windows, so the bound cannot be exceeded);
+    - ``a_max`` / ``rel_cap`` / ``d_cap``: max new arrivals, end-of-life
+      releases, and deferred-arrival carry in any epoch (sliding-window
+      counts over the schedule);
+    - ``m_evict``: eviction buffer — ``slots`` when an outage is configured
+      (everything active could sit in the outaged region), else 0.
+
+    The scanned core still counts any bound violation in
+    ``overflow`` (belt and braces: a nonzero value is an internal error,
+    raised after the scan)."""
+    slots: int
+    a_max: int
+    d_cap: int
+    rel_cap: int
+    m_evict: int
+    arr_ids: np.ndarray     # (T, a_max) int32 job ids arriving per epoch
+
+
+def _scan_plan(cfg: SimConfig, jobs: JobSchedule) -> ScanPlan:
+    T = cfg.epochs
+    arrive = np.asarray(jobs.arrive, np.int64)
+    dur = np.asarray(jobs.duration, np.int64)
+    defer = np.asarray(jobs.deferrable, bool)
+    slack = np.where(defer, cfg.defer_max_h, 0)
+    in_h = arrive < T           # jobs arriving past the horizon never run
+    counts = np.bincount(arrive[in_h], minlength=T) if arrive.size else \
+        np.zeros(T, np.int64)
+    a_max = max(int(counts.max(initial=0)), 1)
+    arr_ids = np.full((T, a_max), -1, np.int32)
+    if arrive.size:
+        # host by_arrival order: ascending job id within each epoch
+        order = np.argsort(arrive, kind="stable")
+        order = order[arrive[order] < T]
+        ofs = np.concatenate([[0], np.cumsum(counts)])
+        pos = np.arange(order.size) - ofs[arrive[order]]
+        arr_ids[arrive[order], pos] = order
+    hi = T + int((dur + slack).max(initial=0)) + 2
+    diff = np.zeros(hi, np.int64)
+    np.add.at(diff, arrive[in_h], 1)
+    np.add.at(diff, (arrive + slack + dur)[in_h], -1)
+    slots = max(int(np.cumsum(diff).max(initial=0)), a_max, 1)
+    # EOL release epoch lies in [arrive + dur, arrive + dur + slack]
+    rdiff = np.zeros(hi, np.int64)
+    np.add.at(rdiff, np.minimum((arrive + dur)[in_h], hi - 1), 1)
+    np.add.at(rdiff, np.minimum((arrive + dur + slack)[in_h] + 1, hi - 1),
+              -1)
+    rel_cap = max(int(np.cumsum(rdiff)[:T].max(initial=0)), 1)
+    # deferred carry into epoch t: deferrable arrivals in [t - defer_max, t)
+    if bool(defer[in_h].sum()) and cfg.defer_max_h > 0:
+        dcounts = np.bincount(arrive[in_h & defer], minlength=T)
+        d_cap = int(np.convolve(dcounts,
+                                np.ones(cfg.defer_max_h, np.int64)).max())
+    else:
+        d_cap = 0
+    m_evict = slots if cfg.outage is not None else 0
+    return ScanPlan(slots=slots, a_max=a_max, d_cap=d_cap, rel_cap=rel_cap,
+                    m_evict=m_evict, arr_ids=arr_ids)
+
+
+@functools.partial(jax.jit, static_argnames=("statics", "dims"))
+def _scan_trajectory(arrs, statics, dims):
+    """The whole trajectory as one ``lax.scan``: fixed-size slot table +
+    padded event buffers around the shared ``_place_epoch`` epoch graph.
+
+    Hot-path structure (all bitwise-neutral vs the host loop's per-epoch
+    graph):
+    - the FCFP forecast only depends on the static traces, so it is batched
+      over all T epochs up front and fed to the scan as ``xs``;
+    - an epoch's releases are commutative capacity edits on a dirty engine,
+      so they are applied as one scatter and the engine starts at the
+      post-release capacity (``_place_epoch``'s ``cap_start``) — the event
+      loop only carries arrivals;
+    - the migration policy's best-feasible-rate per chip demand exploits
+      ``rate = pue · ci_region``: within a region the rate order is the
+      static pue order, so a cummax of free capacity along that order plus
+      a searchsorted replaces a fleet-wide scatter-min."""
+    (T, S, a_max, d_cap, rel_cap, m_evict, budget, chips_max, history_h,
+     defer_max_h, outage, power_off_idle, consolidate, overhead_h) = dims
+    N = arrs["capacity"].shape[0]
+    horizon_h, use_forecast = statics[4], statics[6]
+    budget = min(budget, S)     # can't migrate more jobs than can be active
+    m_cap = budget + m_evict
+    n_narr = d_cap + a_max
+    NARR = m_cap                # event stream: [mover arrivals | new]
+    has_defer = d_cap > 0
+    alloc_cap = min(S, n_narr)
+    INT_MAX = jnp.int32(2 ** 31 - 1)
+    arange_s = jnp.arange(S, dtype=jnp.int32)
+    # f32 mirrors of the host's f64 job_energy_kwh constants (linear in
+    # chips: watts = chips * (CHIP + HOST/8))
+    e_kwh_h = jnp.float32(float(job_energy_kwh(3600.0, 1, 1)))
+    ckpt_kwh = jnp.float32(float(job_energy_kwh(overhead_h * 3600.0, 1, 1)))
+    traces, ridx = arrs["traces"], arrs["ridx"]
+    pue, power_kw = arrs["pue"], arrs["power_kw"]
+    chips_total, flops_per_j = arrs["chips_total"], arrs["flops_per_j"]
+    chips_d, dur_d = arrs["chips"], arrs["duration"]
+    arrive_d, defer_d = arrs["arrive"], arrs["deferrable"]
+    ts = jnp.arange(T, dtype=jnp.int32)
+
+    def take(arr, idx, valid, fill):
+        """Masked gather that never reads a clamped junk lane."""
+        v = arr[jnp.clip(idx, 0, arr.shape[0] - 1)]
+        return jnp.where(valid, v, fill)
+
+    # hoisted forecast: identical per-window math as _epoch_core, vmapped
+    # over epochs (the windows depend only on the constant traces)
+    xs = {"t": ts, "arr": arrs["arr_ids"]}
+    if use_forecast:
+        wins = jax.vmap(lambda t: jax.lax.dynamic_slice_in_dim(
+            traces, t, history_h, axis=1))(ts)
+        fc = jax.vmap(
+            lambda w: forecast.forecast_regions(w, horizon_h, 0)[0])(wins)
+        xs["ci_fc_r"] = jnp.mean(fc, axis=-1)                     # (T, R)
+        xs["fut"] = jnp.min(
+            fc[:, :, :defer_max_h] * arrs["region_pue"][None, :, None],
+            axis=(1, 2))                                          # (T,)
+
+    def body(carry, xs):
+        (cap, njobs, slot_jid, slot_node, slot_end, defer_ids, mig_cost,
+         overflow) = carry
+        t, arr_row = xs["t"], xs["arr"]
+        a = t + history_h
+        healthy = arrs["healthy"]
+        if outage is not None:
+            reg, t0, length = outage
+            healthy = healthy & ~((t >= t0) & (t < t0 + length)
+                                  & (ridx == reg))
+        ci_col_r = jax.lax.dynamic_slice_in_dim(traces, a, 1, axis=1)[:, 0]
+        ci_col = ci_col_r[ridx]
+        occupied = slot_jid >= 0
+
+        # ---- 1. end-of-life releases (vector mask; on a dirty engine
+        # releases are commutative capacity edits, so they are applied as
+        # one scatter instead of consuming event-loop slots) ------------
+        rel_mask = occupied & (slot_end == t)
+        completed_t = jnp.sum(rel_mask.astype(jnp.int32))
+        rel_idx = jnp.nonzero(rel_mask, size=rel_cap, fill_value=S)[0]
+        rel_valid = rel_idx < S
+        rel_node = take(slot_node, rel_idx, rel_valid, -1)
+        rel_jid = take(slot_jid, rel_idx, rel_valid, -1)
+        rel_chips = take(chips_d, jnp.maximum(rel_jid, 0), rel_valid, 0)
+        njobs = njobs.at[jnp.where(rel_valid, rel_node, N)].add(
+            -1, mode="drop")
+        slot_jid = jnp.where(rel_mask, -1, slot_jid)
+        overflow = overflow + jnp.maximum(completed_t - rel_cap, 0)
+
+        # ---- 2. forced evictions + migration policy ------------------
+        occupied2 = slot_jid >= 0
+        node_healthy = take(healthy, slot_node, occupied2, False)
+        stay_mask = occupied2 & node_healthy
+        seg_slot, seg_ok = [], []
+        evictions_t = jnp.int32(0)
+        migrations_t = jnp.int32(0)
+        mig_cost_t = jnp.float32(0.0)
+        if m_evict > 0:
+            evict_mask = occupied2 & ~node_healthy
+            evictions_t = jnp.sum(evict_mask.astype(jnp.int32))
+            ekey = jnp.where(evict_mask, slot_jid, INT_MAX)
+            ekey_s, evict_slot = jax.lax.sort((ekey, arange_s), num_keys=1)
+            seg_slot.append(evict_slot[:m_evict])
+            seg_ok.append(ekey_s[:m_evict] < INT_MAX)
+        if budget > 0:
+            rate = jnp.where(healthy, pue * ci_col, jnp.inf)
+            # best achievable CFP rate per chip demand, O(N + R·C):
+            # within a region rate order == static pue order, so the first
+            # prefix (in pue order) whose free-capacity cummax covers the
+            # demand holds the region's min feasible rate
+            perm, pue_sorted = arrs["mig_perm"], arrs["mig_pue"]
+            capg = take(jnp.where(healthy, cap, -1), perm, perm < N, -1)
+            cmax = jax.lax.cummax(capg, axis=1)
+            cr = jnp.arange(chips_max + 1, dtype=jnp.int32)
+            idx = jax.vmap(
+                lambda row: jnp.searchsorted(row, cr, side="left"))(cmax)
+            ok = idx < perm.shape[1]
+            pb = jnp.take_along_axis(
+                pue_sorted, jnp.clip(idx, 0, perm.shape[1] - 1), axis=1)
+            best_ge = jnp.min(
+                jnp.where(ok, pb * ci_col_r[:, None], jnp.inf), axis=0)
+            s_chips = take(chips_d, jnp.maximum(slot_jid, 0), stay_mask, 0)
+            br = best_ge[jnp.clip(s_chips, 0, chips_max)]
+            rate_cur = take(rate, slot_node, stay_mask, jnp.inf)
+            remaining = jnp.maximum(slot_end - t, 0).astype(jnp.float32)
+            chips_f = s_chips.astype(jnp.float32)
+            benefit = (rate_cur - br) * e_kwh_h * chips_f * remaining
+            gain = benefit - ckpt_kwh * chips_f * rate_cur
+            mk1 = jnp.where(stay_mask, -gain, jnp.inf)
+            mk2 = jnp.where(stay_mask, slot_jid, INT_MAX)
+            _, _, mig_slot = jax.lax.sort((mk1, mk2, arange_s), num_keys=2)
+            mig_slot = mig_slot[:budget]
+            mig_ok = stay_mask[mig_slot] & (gain[mig_slot] > 0.0)
+            migrations_t = jnp.sum(mig_ok.astype(jnp.int32))
+            mnode = jnp.clip(slot_node[mig_slot], 0, N - 1)
+            mchip = chips_d[jnp.maximum(slot_jid[mig_slot], 0)]
+            mig_cost_t = jnp.sum(jnp.where(
+                mig_ok,
+                ckpt_kwh * mchip.astype(jnp.float32)
+                * pue[mnode] * ci_col[mnode], 0.0))
+            seg_slot.append(mig_slot)
+            seg_ok.append(mig_ok)
+        if m_cap > 0:
+            mov_slot = jnp.concatenate(seg_slot)
+            mov_ok = jnp.concatenate(seg_ok)
+            mov_jid = take(slot_jid, mov_slot, mov_ok, -1)
+            mov_old = take(slot_node, mov_slot, mov_ok, -1)
+            mov_chips = take(chips_d, jnp.maximum(mov_jid, 0), mov_ok, 0)
+            njobs = njobs.at[jnp.where(mov_ok, mov_old, N)].add(
+                -1, mode="drop")
+        else:
+            mov_slot = mov_jid = mov_old = mov_chips = \
+                jnp.zeros((0,), jnp.int32)
+            mov_ok = jnp.zeros((0,), bool)
+
+        # ---- 3. apply release credits, then place arrivals ------------
+        strag = arrs["straggler"] + consolidate \
+            * (njobs == 0).astype(jnp.float32)
+        cap_start = cap.at[jnp.where(rel_valid, rel_node, N)].add(
+            rel_chips, mode="drop").at[jnp.where(mov_ok, mov_old, N)].add(
+            mov_chips, mode="drop")
+        narr_jid = jnp.concatenate([defer_ids, arr_row]) if has_defer \
+            else arr_row
+        narr_chips = take(chips_d, jnp.maximum(narr_jid, 0),
+                          narr_jid >= 0, 0)
+        dem_full = jnp.concatenate([mov_chips, narr_chips])
+        E = m_cap + n_narr
+        # compact the stream: pads are exact no-ops for the engine, so the
+        # loop only walks the real arrivals (order preserved) and stops at
+        # their count — the dominant CPU win for the scanned core
+        ev_idx = jnp.nonzero(dem_full > 0, size=E, fill_value=E)[0]
+        n_ev = jnp.sum((dem_full > 0).astype(jnp.int32))
+        dem = take(dem_full, ev_idx, ev_idx < E, 0)
+        tgt = jnp.full((E,), -1, jnp.int32)
+        if use_forecast:
+            ci_fc = xs["ci_fc_r"][ridx]
+            fut_rate = xs["fut"]
+        else:
+            ci_fc = ci_col
+            fut_rate = jnp.float32(jnp.inf)
+        out_c, cap2, n_sw = _place_epoch(
+            pue, power_kw, chips_total, strag, flops_per_j, ci_col, ci_fc,
+            cap, cap_start, healthy, dem, tgt, statics,
+            n_events=n_ev, eager_sweep=True)
+        out = jnp.full((E,), -1, jnp.int32).at[ev_idx].set(
+            out_c, mode="drop")
+        cur_rate = jnp.min(jnp.where(healthy, ci_col * pue, jnp.inf))
+
+        # ---- 4. record outcomes --------------------------------------
+        green = fut_rate < jnp.float32(0.95) * cur_rate
+        placed_t = jnp.int32(0)
+        dropped_t = jnp.int32(0)
+        if m_cap > 0:
+            mnode_new = out[:m_cap]
+            mov_win = (mov_jid >= 0) & (mnode_new >= 0)
+            mov_fail = (mov_jid >= 0) & (mnode_new < 0)
+            slot_node = slot_node.at[jnp.where(mov_win, mov_slot, S)].set(
+                mnode_new, mode="drop")
+            slot_jid = slot_jid.at[jnp.where(mov_fail, mov_slot, S)].set(
+                -1, mode="drop")
+            njobs = njobs.at[jnp.where(mov_win, mnode_new, N)].add(
+                1, mode="drop")
+            placed_t += jnp.sum(mov_win.astype(jnp.int32))
+            dropped_t += jnp.sum(mov_fail.astype(jnp.int32))
+            ys_mov_node = jnp.where(mov_win, mnode_new, -1)
+        else:
+            ys_mov_node = jnp.zeros((0,), jnp.int32)
+        nnode = out[NARR:]
+        valid = narr_jid >= 0
+        jsafe = jnp.maximum(narr_jid, 0)
+        if has_defer:
+            in_win = (t - arrive_d[jsafe]) < defer_max_h
+            can_defer = valid & defer_d[jsafe] & in_win
+            takeback = can_defer & green & (nnode >= 0)
+            defer_again = takeback | (can_defer & (nnode < 0))
+            # taken-back placements release their chips again (the host
+            # loop's redo call is a pure-release engine pass == scatter)
+            cap2 = cap2.at[jnp.where(takeback, nnode, N)].add(
+                narr_chips, mode="drop")
+            deferred_t = jnp.sum(defer_again.astype(jnp.int32))
+            didx = jnp.nonzero(defer_again, size=d_cap,
+                               fill_value=n_narr)[0]
+            defer_ids = take(narr_jid, didx, didx < n_narr, -1)
+            overflow = overflow + jnp.maximum(deferred_t - d_cap, 0)
+        else:
+            takeback = defer_again = jnp.zeros(nnode.shape, bool)
+            deferred_t = jnp.int32(0)
+        place_new = valid & (nnode >= 0) & ~takeback
+        drop_new = valid & (nnode < 0) & ~defer_again
+        free_idx = jnp.nonzero(slot_jid < 0, size=alloc_cap,
+                               fill_value=S)[0]
+        rank = jnp.cumsum(place_new.astype(jnp.int32)) - 1
+        tgt_slot = jnp.where(
+            place_new & (rank < alloc_cap),
+            free_idx[jnp.clip(rank, 0, alloc_cap - 1)], S)
+        overflow = overflow + jnp.sum(
+            (place_new & (tgt_slot >= S)).astype(jnp.int32))
+        slot_jid = slot_jid.at[tgt_slot].set(narr_jid, mode="drop")
+        slot_node = slot_node.at[tgt_slot].set(nnode, mode="drop")
+        slot_end = slot_end.at[tgt_slot].set(t + dur_d[jsafe], mode="drop")
+        njobs = njobs.at[jnp.where(place_new, nnode, N)].add(
+            1, mode="drop")
+        placed_t += jnp.sum(place_new.astype(jnp.int32))
+        dropped_t += jnp.sum(drop_new.astype(jnp.int32))
+
+        # ---- 5. emission accounting ----------------------------------
+        on = (njobs > 0) if power_off_idle else jnp.ones((N,), bool)
+        occ = 1.0 - cap2.astype(jnp.float32) \
+            / jnp.maximum(chips_total.astype(jnp.float32), 1.0)
+        energy = power_kw * (IDLE_POWER_FRAC
+                             + (1.0 - IDLE_POWER_FRAC) * occ) * on
+        e_t = jnp.sum(energy * pue * ci_col)
+
+        carry = (cap2, njobs, slot_jid, slot_node, slot_end, defer_ids,
+                 mig_cost + mig_cost_t, overflow)
+        ys = (e_t, n_sw, completed_t, dropped_t, placed_t, deferred_t,
+              migrations_t, evictions_t, mov_jid, ys_mov_node,
+              jnp.where(place_new, narr_jid, -1),
+              jnp.where(place_new, nnode, -1))
+        return carry, ys
+
+    init = (arrs["capacity"], jnp.zeros((N,), jnp.int32),
+            jnp.full((S,), -1, jnp.int32), jnp.zeros((S,), jnp.int32),
+            jnp.zeros((S,), jnp.int32), jnp.full((d_cap,), -1, jnp.int32),
+            jnp.float32(0.0), jnp.int32(0))
+    return jax.lax.scan(body, init, xs)
+
+
+def simulate_fleet_scan(fleet0: Fleet, region_ci: np.ndarray,
+                        ridx: np.ndarray, cfg: SimConfig,
+                        jobs: Optional[JobSchedule] = None) -> SimResult:
+    """``simulate_fleet`` with the epoch loop compiled as ONE ``lax.scan``.
+
+    Same trajectory semantics as the host loop for
+    ``engine in ("shortlist", "full")`` — arrivals, EOL releases, outage
+    evictions, budget/cost-model migration, deferrable batch jobs — but the
+    T-epoch loop is a single compiled scan over a fixed-capacity job table
+    and padded event buffers (``ScanPlan``), so a year-scale trajectory
+    costs one dispatch instead of T.  The carbon-blind comparators and
+    ``record_matrices`` stay host-only.
+
+    **Equivalence contract** (asserted by ``tests/test_simulator_scan.py``
+    and the ``sim_scale`` bench): per-job placements (``node_log``,
+    ``first_node``) and all integer counters are expected to match the host
+    loop exactly; ``emissions_g`` / ``emissions_series`` /
+    ``migration_cost_g`` match to float32 accumulation tolerance (the host
+    loop accounts in float64 numpy; rtol 1e-4).  The placement decisions
+    run the identical `_epoch_core` graph, and the engine's scoring path is
+    barrier-pinned (see ``repro.core.placement``), so integer divergence
+    can only come from f32-vs-f64 near-ties in the migration-gain ordering
+    or the deferral green-hour comparison — none observed on the tested
+    streams; a mismatch is a regression, not tolerance."""
+    if cfg.engine not in ("shortlist", "full"):
+        raise ValueError(
+            f"scanned core supports engine='shortlist'|'full', got "
+            f"{cfg.engine!r} (blind/spread comparators are host-only)")
+    N, T = fleet0.n, cfg.epochs
+    jobs = jobs if jobs is not None else generate_jobs(cfg)
+    J = jobs.n
+    plan = _scan_plan(cfg, jobs)
+
+    Jp = max(J, 1)
+
+    def jconst(x, fill, dtype):
+        out = np.full(Jp, fill, dtype)
+        out[:J] = np.asarray(x, dtype)[:J]
+        return jnp.asarray(out)
+
+    region_pue = _region_pue(region_ci.shape[0], ridx, fleet0.pue)
+    # static per-region pue-ascending node order for the migration policy's
+    # best-feasible-rate computation (rate = pue · ci_region, so within a
+    # region the rate order never changes)
+    R = region_ci.shape[0]
+    ridx_np = np.asarray(ridx, np.int64)
+    pue_np = np.asarray(fleet0.pue, np.float32)
+    sizes = np.bincount(ridx_np, minlength=R)
+    n_max = max(int(sizes.max(initial=0)), 1)
+    mig_perm = np.full((R, n_max), N, np.int32)       # N = padding sentinel
+    mig_pue = np.full((R, n_max), np.inf, np.float32)
+    order = np.lexsort((pue_np, ridx_np))
+    col = np.arange(order.size) \
+        - np.concatenate([[0], np.cumsum(sizes)])[ridx_np[order]]
+    mig_perm[ridx_np[order], col] = order
+    mig_pue[ridx_np[order], col] = pue_np[order]
+    arrs = dict(
+        mig_perm=jnp.asarray(mig_perm), mig_pue=jnp.asarray(mig_pue),
+        traces=jnp.asarray(region_ci, jnp.float32),
+        ridx=jnp.asarray(ridx, jnp.int32),
+        region_pue=jnp.asarray(region_pue, jnp.float32),
+        pue=fleet0.pue, power_kw=fleet0.power_kw,
+        chips_total=fleet0.chips_total, flops_per_j=fleet0.flops_per_j,
+        straggler=fleet0.straggler_score,
+        healthy=jnp.asarray(fleet0.healthy, bool),
+        capacity=fleet0.capacity.astype(jnp.int32),
+        chips=jconst(jobs.chips, 0, np.int32),
+        duration=jconst(jobs.duration, 1, np.int32),
+        arrive=jconst(jobs.arrive, T + 1, np.int32),
+        deferrable=jconst(jobs.deferrable, False, bool),
+        arr_ids=jnp.asarray(plan.arr_ids),
+    )
+    statics = (cfg.engine, cfg.shortlist, cfg.use_kernel, cfg.weights,
+               cfg.horizon_h, cfg.history_h, cfg.use_forecast,
+               cfg.defer_max_h)
+    dims = (T, plan.slots, plan.a_max, plan.d_cap, plan.rel_cap,
+            plan.m_evict, cfg.migration_budget, int(np.max(jobs.chips,
+                                                           initial=1)),
+            cfg.history_h, cfg.defer_max_h, cfg.outage, cfg.power_off_idle,
+            float(cfg.consolidate), float(cfg.migration_overhead_h))
+    carry, ys = jax.block_until_ready(_scan_trajectory(arrs, statics, dims))
+    (cap_f, njobs_f, slot_jid_f, _, _, defer_f, mig_cost_f,
+     overflow_f) = carry
+    if int(overflow_f) != 0:
+        raise RuntimeError(
+            f"scanned simulator overflowed its static buffers "
+            f"({int(overflow_f)} events beyond ScanPlan(slots={plan.slots},"
+            f" a_max={plan.a_max}, d_cap={plan.d_cap},"
+            f" rel_cap={plan.rel_cap}, m_evict={plan.m_evict})) — bound"
+            f" violated; please report")
+    (e_t, n_sw, completed_t, dropped_t, placed_t, deferred_t, mig_t,
+     evi_t, mov_jid, mov_node, new_jid, new_node) = [np.asarray(y)
+                                                     for y in ys]
+    series = e_t.astype(np.float64)
+    # replay the per-event placement log chronologically: within an epoch
+    # movers precede new arrivals (host step-4 order); a job appears at
+    # most once per epoch, so first/last occurrence give first/final node
+    ev_jid = np.concatenate([mov_jid, new_jid], axis=1).ravel()
+    ev_node = np.concatenate([mov_node, new_node], axis=1).ravel()
+    mask = (ev_jid >= 0) & (ev_node >= 0)
+    j_m, n_m = ev_jid[mask], ev_node[mask]
+    node_log = np.full(J, -1, np.int64)
+    first_node = np.full(J, -1, np.int64)
+    uniq, first_idx = np.unique(j_m, return_index=True)
+    first_node[uniq] = n_m[first_idx]
+    uniq_r, last_idx = np.unique(j_m[::-1], return_index=True)
+    node_log[uniq_r] = n_m[::-1][last_idx]
+    # jobs still waiting in the deferral queue never ran -> dropped
+    dropped = int(dropped_t.sum()) + int((np.asarray(defer_f) >= 0).sum())
+    mig_cost = float(mig_cost_f)
+    return SimResult(
+        emissions_g=float(series.sum()) + mig_cost,
+        migration_cost_g=mig_cost,
+        rank_sweeps=int(n_sw.sum()),
+        arrivals_placed=int(placed_t.sum()),
+        jobs_completed=int(completed_t.sum()),
+        jobs_dropped=dropped,
+        jobs_deferred=int(deferred_t.sum()),
+        migrations=int(mig_t.sum()),
+        evictions=int(evi_t.sum()),
+        node_log=node_log, first_node=first_node,
+        emissions_series=series)
 
 
 # ---------------------------------------------------------------------------

@@ -45,7 +45,15 @@ def maiz_ranking_topk(ec, pue, ci_now, ci_fc, eff, sched, weights, *,
 
     Returns (scores (N,), topk_scores (k',), topk_nodes (k',)) with
     k' = min(k, N), ordered lexicographically by (score, node index) —
-    identical tie-breaking to ``jnp.argmin`` / stable sort."""
+    identical tie-breaking to ``jnp.argmin`` / stable sort.
+
+    Scan-compatible: the placement engine's epoch sweeps call this inside
+    ``lax.scan`` (``simulator.simulate_fleet_scan`` with
+    ``use_kernel=True``), in interpret mode on CPU and compiled on TPU.
+    Callers embedding it in ``lax.cond`` branches should hoist it to the
+    loop level where possible — XLA:CPU lowers the ``lax.top_k`` merge as
+    a full sort inside conditionals (~50x slower; see the placement
+    engine's ``eager_sweep``)."""
     if interpret is None:
         interpret = _default_interpret()
     n = ec.shape[0]
