@@ -9,6 +9,9 @@ Usage (one call per artifact kind):
     python benchmarks/check_regression.py --kind placement \
         --current BENCH_placement.json \
         --baseline benchmarks/baselines/BENCH_placement_smoke.json
+    python benchmarks/check_regression.py --kind policy \
+        --current BENCH_policy.json \
+        --baseline benchmarks/baselines/BENCH_policy_smoke.json
 
 Gates (exit 1 on any):
 - **parity breaks**: any parity flag false in the current artifact
@@ -19,6 +22,10 @@ Gates (exit 1 on any):
   means the shortlist/bound machinery got weaker);
 - **paper drift**: |scenario C − 85.68 %| > 0.01 pp (tighter than the
   bench's own 0.05 pp sanity bound — a calibration-level gate);
+- **policy regressions** (``--kind policy``): green-window planner no
+  longer no-worse than reactive at acceptance scale, SLO carbon/latency
+  frontier non-monotone, or CO2-saving / deadline-miss metrics drifting
+  past absolute slacks vs the committed baseline;
 - **runtime regressions**: any matched runtime metric slower than baseline
   by more than ``--runtime-tol`` (default 1.5x).  Baselines carry numbers
   from the machine class that produced them; regenerate them (rerun the
@@ -74,6 +81,21 @@ class Table:
         else:
             self.add(metric, "-", cur, OK if cur else FAIL,
                      "" if cur else "parity flag is false")
+
+    def check_delta(self, metric: str, base: Optional[float],
+                    cur: Optional[float], slack: float,
+                    higher_is_better: bool = False):
+        """Absolute-tolerance gate for metrics whose baseline can sit at
+        or near zero (savings in pp, miss rates), where a ratio check
+        degenerates."""
+        if base is None or cur is None:
+            self.add(metric, base, cur, SKIP, "missing on one side")
+            return
+        bad = cur < base - slack if higher_is_better else \
+            cur > base + slack
+        self.add(metric, round(base, 4), round(cur, 4),
+                 FAIL if bad else OK,
+                 f"delta {cur - base:+.4f} (slack {slack})")
 
     def markdown(self, title: str) -> str:
         lines = [f"### bench regression: {title}", "",
@@ -140,9 +162,46 @@ def check_sim(base: dict, cur: dict, t: Table, tol: float) -> None:
               f"drift {drift:.4f}pp (tol {PAPER_DRIFT_PP}pp)")
 
 
+def check_policy(base: dict, cur: dict, t: Table, tol: float) -> None:
+    """Carbon-policy gates: the planner must stay no-worse than reactive
+    at acceptance scale (flag recorded by the bench), the SLO
+    carbon/latency frontier must stay monotone, and the CO2-saving /
+    deadline-miss numbers must not regress vs the committed baseline
+    (absolute slack — savings are small percentages, ratio checks
+    degenerate near zero)."""
+    for key, b, c in _match(base, cur):
+        tag = f"n={key[0]}/t={key[1]}"
+        if c.get("gate_scale"):
+            t.check_flag(f"{tag} planner no-worse (CO2 + migrations)",
+                         c.get("planner", {}).get("no_worse"))
+        else:
+            t.add(f"{tag} planner no-worse (CO2 + migrations)", "-",
+                  c.get("planner", {}).get("no_worse"), SKIP,
+                  "below acceptance scale (smoke)")
+        if c.get("gate_scale"):
+            t.check_flag(f"{tag} frontier monotone",
+                         c.get("frontier_monotone"))
+        else:
+            t.add(f"{tag} frontier monotone", "-",
+                  c.get("frontier_monotone"), SKIP,
+                  "below acceptance scale (delta gates cover smoke)")
+        t.check_delta(f"{tag} planner saving pct",
+                      b.get("planner", {}).get("saving_pct"),
+                      c.get("planner", {}).get("saving_pct"),
+                      slack=0.25, higher_is_better=True)
+        t.check_delta(f"{tag} SLO max saving pct",
+                      b.get("slo_max_saving_pct"),
+                      c.get("slo_max_saving_pct"),
+                      slack=1.0, higher_is_better=True)
+        t.check_delta(f"{tag} SLO miss rate max",
+                      b.get("slo_miss_rate_max"),
+                      c.get("slo_miss_rate_max"), slack=0.02)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--kind", choices=("sim", "placement"), required=True)
+    ap.add_argument("--kind", choices=("sim", "placement", "policy"),
+                    required=True)
     ap.add_argument("--current", required=True)
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--runtime-tol", type=float, default=1.5)
@@ -160,6 +219,8 @@ def main() -> int:
     if not t.failures:
         if args.kind == "placement":
             check_placement(base, cur, t, args.runtime_tol)
+        elif args.kind == "policy":
+            check_policy(base, cur, t, args.runtime_tol)
         else:
             check_sim(base, cur, t, args.runtime_tol)
         if not t.rows:

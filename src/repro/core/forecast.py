@@ -75,6 +75,39 @@ forecast_regions = jax.vmap(fit_forecast, in_axes=(0, None, None),
                             out_axes=(0, 0))
 
 
+def green_window_signals(fc: jax.Array, region_pue: jax.Array,
+                         lookahead_h: int, discount: float = 0.9
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Green-window extraction over a region forecast tensor.
+
+    ``fc`` is ``(..., R, H)`` forecast CI (any leading batch axes — the
+    scanned simulator passes the whole ``(T, R, H)`` trajectory tensor);
+    ``region_pue`` is the per-region representative PUE (``+inf`` rows for
+    regions with no nodes, so they can never win a min).  Returns
+
+    - ``la_ci`` ``(..., R)``: discount-weighted mean forecast CI over the
+      next ``L = min(lookahead_h, H)`` hours (weights ``discount**h``,
+      normalized) — the planner's "what does staying in this region cost"
+      signal, robust to ``horizon < lookahead_h`` by clamping;
+    - ``gw_min`` ``(...,)``: the greenest achievable CFP *rate*
+      (CI x PUE) at any single hour inside the window — the green-window
+      gate reference (migrate only when the present is within
+      ``green_gate`` x of this).
+    """
+    L = max(1, min(int(lookahead_h), fc.shape[-1]))
+    w = jnp.asarray(discount, jnp.float32) ** jnp.arange(L,
+                                                         dtype=jnp.float32)
+    w = w / jnp.sum(w)
+    la_ci = jnp.sum(fc[..., :L] * w, axis=-1)
+    # node-less regions are masked explicitly rather than relying on the
+    # fc * inf product: fit_forecast clamps forecasts at exactly 0.0, and
+    # 0 * inf = NaN would silently poison the min
+    gw_min = jnp.min(jnp.where(jnp.isfinite(region_pue)[..., :, None],
+                               fc[..., :L] * region_pue[..., :, None],
+                               jnp.inf), axis=(-2, -1))
+    return la_ci, gw_min
+
+
 def forecast_skill(history: jax.Array, test: jax.Array) -> jax.Array:
     """MAE ratio vs 24h-persistence baseline (<1 means we beat persistence)."""
     fc, _ = fit_forecast(history, test.shape[0])

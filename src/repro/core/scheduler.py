@@ -142,7 +142,10 @@ def place_events(fleet: Fleet, demands: jax.Array, nodes: jax.Array,
                  horizon_h: float = 1.0, *,
                  engine: str = "shortlist", shortlist: int = 32,
                  use_kernel: bool = False,
-                 interpret: Optional[bool] = None) -> Placement:
+                 interpret: Optional[bool] = None,
+                 capacity: Optional[jax.Array] = None,
+                 n_events: Optional[jax.Array] = None,
+                 eager_sweep: bool = False) -> Placement:
     """Lifecycle placement over an interleaved event stream.
 
     ``demands[e] > 0`` is an arrival (greedily placed, like ``place_jobs``);
@@ -154,17 +157,24 @@ def place_events(fleet: Fleet, demands: jax.Array, nodes: jax.Array,
     ``repro.core.placement``.  This is the per-epoch entry point of the
     rolling fleet simulator (``repro.core.simulator``); the scan-compiled
     core (``simulator.simulate_fleet_scan``) drives the same engines inside
-    ``lax.scan`` with pre-applied release credits (see
-    ``placement.place_lifecycle_shortlist``'s ``capacity``/``eager_sweep``
-    contract).  ``interpret`` forces/disables Pallas
-    interpret mode for ``use_kernel=True`` (None = auto by backend)."""
+    ``lax.scan`` with pre-applied release credits.  The engine's scan-side
+    event contract is exposed here too: ``capacity`` starts the event loop
+    at a post-release snapshot while normalizers stay frozen at
+    ``fleet.capacity``, ``n_events`` truncates the loop at the compacted
+    event count, and ``eager_sweep`` hoists the epoch-initial sweep out of
+    the loop (valid for release-free streams only — see
+    ``placement.place_lifecycle_shortlist``).  ``interpret``
+    forces/disables Pallas interpret mode for ``use_kernel=True``
+    (None = auto by backend)."""
     if engine == "shortlist":
         r = placement.place_lifecycle_shortlist(
             fleet, demands, nodes, weights, horizon_h, shortlist=shortlist,
-            use_kernel=use_kernel, interpret=interpret)
+            use_kernel=use_kernel, interpret=interpret, capacity=capacity,
+            n_events=n_events, eager_sweep=eager_sweep)
     elif engine == "full":
-        r = placement.place_lifecycle_full_rerank(fleet, demands, nodes,
-                                                  weights, horizon_h)
+        r = placement.place_lifecycle_full_rerank(
+            fleet, demands, nodes, weights, horizon_h, capacity=capacity,
+            n_events=n_events)
     else:
         raise ValueError(f"unknown placement engine: {engine!r}")
     return Placement(node=r.node, scores=r.scores, n_sweeps=r.n_sweeps)
@@ -172,4 +182,5 @@ def place_events(fleet: Fleet, demands: jax.Array, nodes: jax.Array,
 
 place_events_jit = jax.jit(place_events,
                            static_argnames=("engine", "shortlist",
-                                            "use_kernel"))
+                                            "use_kernel", "interpret",
+                                            "eager_sweep"))

@@ -10,10 +10,17 @@ advances a fleet through T hourly epochs.  Each epoch:
 2. releases finished jobs (their chips return to their nodes — scores
    *fall*, which is why placement runs on the lifecycle engine with
    release-aware epoch invalidation, see ``repro.core.placement``);
-3. optionally migrates the worst-placed running jobs when the CI landscape
-   has shifted enough to beat the checkpoint/restore carbon cost
+3. optionally migrates the worst-placed running jobs when the carbon
+   policy's gain beats the checkpoint/restore carbon cost
    (``migration_budget`` per epoch, cost model in gCO2 via
-   ``carbon.job_energy_kwh``), and force-evicts jobs from outaged regions;
+   ``carbon.job_energy_kwh``), and force-evicts jobs from outaged
+   regions.  Migration gain and deferral decisions are pluggable through
+   ``SimConfig.policy`` (``repro.core.policy``): the reactive parity
+   oracle, the forecast-driven green-window planner (discounted
+   look-ahead over the forecast tensor, moves gated into green windows),
+   and SLO-aware deferral (deadline/value priority queue with
+   deadline-miss accounting) — both drivers consume the same ``Policy``
+   expressions, so host and scan cannot drift;
 4. admits a stochastic-but-seeded arrival stream (diurnal modulation,
    optional flash crowds, deferrable batch jobs that wait for greener
    hours), placing every event through ONE lifecycle-engine call —
@@ -59,10 +66,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import forecast, telemetry
+from repro.core import policy as policylib
 from repro.core.carbon import job_energy_kwh
 from repro.core.fleet import IDLE_POWER_FRAC, Fleet
 from repro.core.placement import (place_lifecycle_full_rerank,
                                   place_lifecycle_shortlist)
+from repro.core.policy import Policy, PolicyConfig
 from repro.core.ranking import RankWeights
 
 # job state machine
@@ -89,6 +98,8 @@ class SimConfig:
     chips_hi: int = 64
     deferrable_frac: float = 0.0    # batch jobs that can wait for green hours
     defer_max_h: int = 6
+    # --- policy subsystem (migration + deferral, see repro.core.policy) ---
+    policy: PolicyConfig = PolicyConfig()
     # --- migration ---
     migration_budget: int = 0       # max policy migrations / epoch
     migration_overhead_h: float = 0.05   # checkpoint+restore wall clock
@@ -110,12 +121,19 @@ class SimConfig:
 
 @dataclasses.dataclass
 class JobSchedule:
-    """Struct-of-arrays over jobs, sorted by arrival epoch."""
+    """Struct-of-arrays over jobs, sorted by arrival epoch.
+
+    ``deadline``/``value`` are the SLO-deferral columns (latest start
+    slack in epochs and queue-priority value); ``None`` means the policy
+    layer derives the reactive defaults (``defer_max_h`` slack for
+    deferrable jobs, unit value) — see ``policy.Policy.for_jobs``."""
     arrive: np.ndarray      # (J,) epoch of arrival
     chips: np.ndarray       # (J,) chip demand
     duration: np.ndarray    # (J,) epochs of runtime
     load: np.ndarray        # (J,) float dynamic load (util accounting)
     deferrable: np.ndarray  # (J,) bool
+    deadline: Optional[np.ndarray] = None   # (J,) start slack in epochs
+    value: Optional[np.ndarray] = None      # (J,) f32 job value
 
     @property
     def n(self) -> int:
@@ -143,10 +161,21 @@ def generate_jobs(cfg: SimConfig) -> JobSchedule:
     duration = 1 + rng.geometric(p, J) \
         if cfg.mean_duration_h > 1.0 else np.ones(J, np.int64)
     deferrable = rng.random(J) < cfg.deferrable_frac
+    # SLO columns are drawn AFTER every reactive column so enabling the
+    # SLO policy cannot perturb the reactive arrival stream (the committed
+    # bench baselines and the PR 3 golden trajectories depend on it)
+    deadline = value = None
+    if cfg.policy.deferral == "slo":
+        lo = max(cfg.policy.deadline_lo, 1)
+        hi = max(cfg.policy.deadline_hi
+                 if cfg.policy.deadline_hi > 0 else cfg.defer_max_h, lo)
+        deadline = rng.integers(lo, hi + 1, J)
+        value = rng.exponential(1.0, J).astype(np.float32)
     return JobSchedule(arrive=arrive, chips=chips.astype(np.int64),
                        duration=duration.astype(np.int64),
                        load=chips.astype(np.float64),
-                       deferrable=deferrable)
+                       deferrable=deferrable, deadline=deadline,
+                       value=value)
 
 
 @dataclasses.dataclass
@@ -163,6 +192,9 @@ class SimResult:
     node_log: np.ndarray            # (J,) final node per job (-1 = dropped)
     first_node: np.ndarray          # (J,) first placement per job
     emissions_series: np.ndarray    # (T,) gCO2 per epoch
+    deadline_misses: int = 0        # slack>0 jobs that never started in time
+    defer_delay_h: int = 0          # sum of (start - arrive) over placements
+    start_epoch: Optional[np.ndarray] = None  # (J,) first-placement epoch
     util: Optional[np.ndarray] = None   # (N, T) when record_matrices
     on: Optional[np.ndarray] = None
 
@@ -216,7 +248,7 @@ def _epoch_core(traces, ridx, pue, power_kw, chips_total, straggler,
     ``lax.scan``, with the forecast batched over epochs up front (bitwise
     equal: it only depends on the static traces)."""
     (engine, shortlist, use_kernel, weights, horizon_h, history_h,
-     use_forecast, defer_max_h) = statics
+     use_forecast, defer_window) = statics
     ci_now_r = jax.lax.dynamic_slice_in_dim(traces, t, 1, axis=1)[:, 0]
     ci_now = ci_now_r[ridx]
     if use_forecast:
@@ -225,8 +257,14 @@ def _epoch_core(traces, ridx, pue, power_kw, chips_total, straggler,
         fc, _ = forecast.forecast_regions(window, horizon_h, 0)  # (R, H)
         ci_fc = jnp.mean(fc, axis=-1)[ridx]
         # greenest achievable CFP rate inside the deferral window, for the
-        # deferrable-batch policy (min over regions and near-term hours)
-        fut_rate = jnp.min(fc[:, :defer_max_h] * region_pue[:, None])
+        # deferrable-batch policy (min over regions and near-term hours);
+        # the window is policy-derived (reactive: defer_max_h, SLO: the
+        # largest per-job slack — see policy.Policy.defer_window).
+        # Node-less regions are masked, not inf-multiplied: a clamped
+        # 0.0 forecast times the +inf sentinel would be NaN
+        fut_rate = jnp.min(jnp.where(
+            jnp.isfinite(region_pue)[:, None],
+            fc[:, :defer_window] * region_pue[:, None], jnp.inf))
     else:
         ci_fc = ci_now
         fut_rate = jnp.float32(jnp.inf)
@@ -238,6 +276,33 @@ def _epoch_core(traces, ridx, pue, power_kw, chips_total, straggler,
 
 
 _epoch_step = jax.jit(_epoch_core, static_argnames=("statics",))
+
+
+@functools.partial(jax.jit, static_argnames=("epochs", "history_h",
+                                             "horizon_h", "lookahead_h",
+                                             "discount"))
+def _lookahead_signals(traces, region_pue, epochs, history_h, horizon_h,
+                       lookahead_h, discount):
+    """Green-window planner signals for ALL epochs in one batched call:
+    the identical windowed-forecast graph the scanned core hoists as scan
+    ``xs`` (it only depends on the static traces), reduced by
+    ``forecast.green_window_signals``.  Returns ``(la_ci (T, R),
+    la_dst (T,), gw_min (T,))`` — the discounted look-ahead CI per
+    region, the greenest discounted region rate, and the greenest single
+    upcoming moment (the green-window gate reference).  The host loop
+    computes these once up front so its migration policy reads the same
+    float32 forecast signals as the scanned core."""
+    ts = jnp.arange(epochs, dtype=jnp.int32)
+    wins = jax.vmap(lambda t: jax.lax.dynamic_slice_in_dim(
+        traces, t, history_h, axis=1))(ts)
+    fc = jax.vmap(
+        lambda w: forecast.forecast_regions(w, horizon_h, 0)[0])(wins)
+    la_ci, gw_min = forecast.green_window_signals(
+        fc, region_pue, lookahead_h, discount)
+    la_dst = jnp.min(jnp.where(jnp.isfinite(region_pue)[None, :],
+                               la_ci * region_pue[None, :], jnp.inf),
+                     axis=-1)
+    return la_ci, la_dst, gw_min
 
 
 def _region_pue(n_regions: int, ridx: np.ndarray, pue) -> np.ndarray:
@@ -283,6 +348,13 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
     blind = cfg.engine in ("blind", "spread")
     spread = cfg.engine == "spread"
     rr_ptr = [0]                            # round-robin pointer (spread)
+    pol = Policy.for_jobs(cfg.policy, jobs.arrive, jobs.deferrable,
+                          cfg.defer_max_h, jobs.deadline, jobs.value)
+    slo = pol.slo
+    q_cap = pol.queue_cap(T) if slo else 0
+    planner = (pol.lookahead and cfg.migration_budget > 0 and not blind
+               and cfg.use_forecast)
+    green_factor = float(cfg.policy.defer_green_factor)
 
     traces = jnp.asarray(region_ci, jnp.float32)
     ridx_d = jnp.asarray(ridx, jnp.int32)
@@ -303,6 +375,7 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
     # job table
     jnode = np.full(J, -1, np.int64)
     jfirst = np.full(J, -1, np.int64)
+    jstart = np.full(J, -1, np.int64)
     jend = np.full(J, -1, np.int64)
     jstate = np.full(J, _PENDING, np.int8)
     ends: Dict[int, list] = {}
@@ -310,19 +383,26 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
     for j in range(J):
         by_arrival.setdefault(int(jobs.arrive[j]), []).append(j)
     deferred: Dict[int, list] = {}
+    slo_queue: list = []                   # SLO priority queue (sorted)
 
     emissions = 0.0
     mig_cost_total = 0.0
     sweeps = placed = completed = dropped = deferred_n = 0
-    migrations = evictions = 0
+    migrations = evictions = misses = delay_h = 0
     series = np.zeros(T)
     util_m = np.zeros((N, T)) if record_matrices else None
     on_m = np.zeros((N, T)) if record_matrices else None
 
     statics = (cfg.engine, cfg.shortlist, cfg.use_kernel, cfg.weights,
                cfg.horizon_h, cfg.history_h,
-               cfg.use_forecast and not blind, cfg.defer_max_h)
+               cfg.use_forecast and not blind,
+               pol.defer_window(cfg.defer_max_h))
     overhead_s = cfg.migration_overhead_h * 3600.0
+    if planner:
+        la_ci_all, la_dst_all, gw_min_all = [
+            np.asarray(x) for x in _lookahead_signals(
+                traces, region_pue_d, T, cfg.history_h, cfg.horizon_h,
+                cfg.policy.lookahead_h, cfg.policy.discount)]
 
     for t in range(T):
         a = cfg.history_h + t
@@ -357,15 +437,23 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
                 best_rate[int(c)] = float(feas.min()) if feas.size else np.inf
             # per-chip-hour energy of a job (kWh): chips · board+host power
             e_kwh_h = job_energy_kwh(3600.0, 1, 1)  # per chip per hour
-            gain = np.empty(stay.size)
-            for i, j in enumerate(stay):
-                remaining = max(int(jend[j]) - t, 0)
-                br = best_rate[int(jobs.chips[j])]
-                benefit = ((rate[jnode[j]] - br)
-                           * float(e_kwh_h) * jobs.chips[j] * remaining)
-                cost = (float(job_energy_kwh(overhead_s, 1, int(jobs.chips[j])))
-                        * rate[jnode[j]])
-                gain[i] = benefit - cost
+            chips_arr = jobs.chips[stay]
+            br_arr = np.array([best_rate[int(c)] for c in chips_arr]) \
+                if stay.size else np.empty(0)
+            la_kw = {}
+            if planner:
+                la_node = la_ci_all[t][ridx] * pue_h        # (N,) f64
+                la_kw = dict(src_la=la_node[jnode[stay]],
+                             dst_la=float(la_dst_all[t]),
+                             gw_min=float(gw_min_all[t]))
+            gain = policylib.migration_gain(
+                np, cfg.policy,
+                rate_cur=rate[jnode[stay]], best_rate=br_arr,
+                chips=chips_arr,
+                remaining=np.maximum(jend[stay] - t, 0),
+                e_kwh_h=float(e_kwh_h),
+                ckpt=np.asarray(job_energy_kwh(overhead_s, 1, chips_arr)),
+                **la_kw)
             order = np.argsort(-gain, kind="stable")
             mig = [int(stay[i]) for i in order[:cfg.migration_budget]
                    if gain[i] > 0.0]
@@ -381,7 +469,8 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
                     * pue_h[jnode[j]] * ci_col[jnode[j]])
 
         # ---- 3. new arrivals (+ deferral policy) --------------------
-        arr_jobs = deferred.pop(t, []) + by_arrival.pop(t, [])
+        arr_jobs = (slo_queue if slo else deferred.pop(t, [])) \
+            + by_arrival.pop(t, [])
         # deferral decided after the jitted step computes rates; we peek
         # using the raw trace for the policy signal only when forecasting
         # is off-path (blind engine never defers)
@@ -423,28 +512,58 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
         # deferrable jobs whose green hour is coming release their slot
         # again (we re-run them next epoch); done post-hoc so the event
         # stream stays identical across engines
-        green_later = fut_rate < 0.95 * cur_rate
+        green_later = bool(policylib.wants_defer(fut_rate, cur_rate,
+                                                 green_factor))
+        keepset: set = set()
+        if slo:
+            # SLO deferral: queued/new jobs that want to wait compete for
+            # the fixed-capacity priority queue (value asc, deadline desc,
+            # jid — cheap flexible work rides green windows); overflow and
+            # deadline-reached jobs place immediately.  The per-job green
+            # comparison runs in float32 so it is bit-identical to the
+            # scanned core's.
+            cur32, fut32 = np.float32(cur_rate), np.float32(fut_rate)
+            cand = []
+            for i, j in enumerate(arr_jobs):
+                if pol.slack[j] > 0 \
+                        and (t - int(jobs.arrive[j])) < int(pol.slack[j]):
+                    node = int(out[arr_off + i])
+                    if node < 0 or bool(policylib.wants_defer(
+                            fut32, cur32, pol.thresh[j])):
+                        cand.append(j)
+            slo_queue = []
+            if cand:
+                cj = np.asarray(cand, np.int64)
+                order = policylib.slo_queue_order(pol.value[cj],
+                                                  pol.deadline_ep[cj], cj)
+                slo_queue = [int(cj[k]) for k in order[:q_cap]]
+            keepset = set(slo_queue)
         redo_d, redo_n = [], []
         for i, j in enumerate(movers + arr_jobs):
             node = int(out[arr_off - len(movers) + i]) if i < len(movers) \
                 else int(out[arr_off + (i - len(movers))])
             is_new = i >= len(movers)
-            if is_new and node >= 0 and green_later and jobs.deferrable[j] \
-                    and (t - int(jobs.arrive[j])) < cfg.defer_max_h:
-                # take the placement back: defer to next epoch
-                redo_d.append(-int(jobs.chips[j]))
-                redo_n.append(node)
-                deferred.setdefault(t + 1, []).append(j)
-                deferred_n += 1
-                continue
-            if node < 0:
-                if is_new and jobs.deferrable[j] \
-                        and (t - int(jobs.arrive[j])) < cfg.defer_max_h:
-                    deferred.setdefault(t + 1, []).append(j)
-                    deferred_n += 1
+            if is_new:
+                if slo:
+                    defer_now = j in keepset
                 else:
-                    jstate[j] = _DROPPED
-                    dropped += 1
+                    defer_now = bool(jobs.deferrable[j]) \
+                        and (t - int(jobs.arrive[j])) < cfg.defer_max_h \
+                        and (green_later if node >= 0 else True)
+                if defer_now:
+                    if node >= 0:
+                        # take the placement back: defer to next epoch
+                        redo_d.append(-int(jobs.chips[j]))
+                        redo_n.append(node)
+                    if not slo:
+                        deferred.setdefault(t + 1, []).append(j)
+                    deferred_n += 1
+                    continue
+            if node < 0:
+                jstate[j] = _DROPPED
+                dropped += 1
+                if is_new and pol.slack[j] > 0:
+                    misses += 1
                 continue
             if jstate[j] != _ACTIVE:       # first placement
                 jstate[j] = _ACTIVE
@@ -452,6 +571,8 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
                 ends.setdefault(int(jend[j]), []).append(j)
                 if jfirst[j] < 0:
                     jfirst[j] = node
+                jstart[j] = t
+                delay_h += t - int(jobs.arrive[j])
             jnode[j] = node
             njobs[node] += 1
             load_on[node] += jobs.load[j]
@@ -489,12 +610,14 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
             on_m[:, t] = on.astype(np.float64)
 
     # jobs still waiting in the deferral queue when the horizon ends were
-    # never run: account them as dropped so totals reconcile with jobs.n
-    for pending in deferred.values():
+    # never run: account them as dropped (and as deadline misses — every
+    # queued job has slack > 0) so totals reconcile with jobs.n
+    for pending in list(deferred.values()) + [slo_queue]:
         for j in pending:
             if jstate[j] == _PENDING:
                 jstate[j] = _DROPPED
                 dropped += 1
+                misses += 1
 
     emissions += mig_cost_total
     return SimResult(emissions_g=emissions, migration_cost_g=mig_cost_total,
@@ -502,7 +625,9 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
                      jobs_completed=completed, jobs_dropped=dropped,
                      jobs_deferred=deferred_n, migrations=migrations,
                      evictions=evictions, node_log=jnode, first_node=jfirst,
-                     emissions_series=series, util=util_m, on=on_m)
+                     emissions_series=series, deadline_misses=misses,
+                     defer_delay_h=delay_h, start_epoch=jstart,
+                     util=util_m, on=on_m)
 
 
 def _place_blind(dem: np.ndarray, tgt: np.ndarray, cap: np.ndarray,
@@ -567,16 +692,23 @@ class ScanPlan:
     arr_ids: np.ndarray     # (T, a_max) int32 job ids arriving per epoch
 
 
-def _scan_plan(cfg: SimConfig, jobs: JobSchedule) -> ScanPlan:
+def _scan_plan(cfg: SimConfig, jobs: JobSchedule, pol: Policy,
+               pad: bool = False) -> ScanPlan:
+    """Derive the scanned core's static shapes.  ``pad`` rounds every
+    buffer up to ``_pad_bucket`` sizes — behavior-neutral (pads are exact
+    no-ops) but it lets seed ensembles with slightly different schedules
+    share one compiled trajectory, the decisive win for
+    ``sweep_policies`` grids."""
     T = cfg.epochs
     arrive = np.asarray(jobs.arrive, np.int64)
     dur = np.asarray(jobs.duration, np.int64)
-    defer = np.asarray(jobs.deferrable, bool)
-    slack = np.where(defer, cfg.defer_max_h, 0)
+    slack = pol.slack           # (J,) per-job start slack (policy column)
     in_h = arrive < T           # jobs arriving past the horizon never run
     counts = np.bincount(arrive[in_h], minlength=T) if arrive.size else \
         np.zeros(T, np.int64)
     a_max = max(int(counts.max(initial=0)), 1)
+    if pad:
+        a_max = _pad_bucket(a_max)
     arr_ids = np.full((T, a_max), -1, np.int32)
     if arrive.size:
         # host by_arrival order: ascending job id within each epoch
@@ -596,13 +728,18 @@ def _scan_plan(cfg: SimConfig, jobs: JobSchedule) -> ScanPlan:
     np.add.at(rdiff, np.minimum((arrive + dur + slack)[in_h] + 1, hi - 1),
               -1)
     rel_cap = max(int(np.cumsum(rdiff)[:T].max(initial=0)), 1)
-    # deferred carry into epoch t: deferrable arrivals in [t - defer_max, t)
-    if bool(defer[in_h].sum()) and cfg.defer_max_h > 0:
-        dcounts = np.bincount(arrive[in_h & defer], minlength=T)
-        d_cap = int(np.convolve(dcounts,
-                                np.ones(cfg.defer_max_h, np.int64)).max())
+    if pol.slo:
+        # SLO: the carry IS the fixed-capacity priority queue
+        d_cap = pol.queue_cap(T) if bool((slack[in_h] > 0).sum()) else 0
     else:
-        d_cap = 0
+        # reactive deferral carry: the same occupancy bound, always sound
+        # (the overflow counter turns any violation into a raised error)
+        d_cap = policylib.sound_queue_bound(arrive, slack, T)
+    if pad:
+        slots = _pad_bucket(slots)
+        rel_cap = _pad_bucket(rel_cap)
+        if d_cap > 0 and not pol.slo:   # the SLO queue cap is semantic
+            d_cap = _pad_bucket(d_cap)
     m_evict = slots if cfg.outage is not None else 0
     return ScanPlan(slots=slots, a_max=a_max, d_cap=d_cap, rel_cap=rel_cap,
                     m_evict=m_evict, arr_ids=arr_ids)
@@ -626,10 +763,14 @@ def _scan_trajectory(arrs, statics, dims):
       static pue order, so a cummax of free capacity along that order plus
       a searchsorted replaces a fleet-wide scatter-min."""
     (T, S, a_max, d_cap, rel_cap, m_evict, budget, chips_max, history_h,
-     defer_max_h, outage, power_off_idle, consolidate, overhead_h) = dims
+     defer_max_h, outage, power_off_idle, consolidate, overhead_h,
+     pcfg) = dims
     N = arrs["capacity"].shape[0]
     horizon_h, use_forecast = statics[4], statics[6]
+    defer_window = statics[7]
     budget = min(budget, S)     # can't migrate more jobs than can be active
+    slo = pcfg.deferral == "slo"
+    planner = pcfg.migration == "lookahead" and use_forecast and budget > 0
     m_cap = budget + m_evict
     n_narr = d_cap + a_max
     NARR = m_cap                # event stream: [mover arrivals | new]
@@ -646,6 +787,10 @@ def _scan_trajectory(arrs, statics, dims):
     chips_total, flops_per_j = arrs["chips_total"], arrs["flops_per_j"]
     chips_d, dur_d = arrs["chips"], arrs["duration"]
     arrive_d, defer_d = arrs["arrive"], arrs["deferrable"]
+    if slo:
+        slack_d, thresh_d = arrs["slack"], arrs["thresh"]
+        value_d, deadline_d = arrs["value"], arrs["deadline"]
+        arange_e = jnp.arange(n_narr, dtype=jnp.int32)
     ts = jnp.arange(T, dtype=jnp.int32)
 
     def take(arr, idx, valid, fill):
@@ -662,9 +807,26 @@ def _scan_trajectory(arrs, statics, dims):
         fc = jax.vmap(
             lambda w: forecast.forecast_regions(w, horizon_h, 0)[0])(wins)
         xs["ci_fc_r"] = jnp.mean(fc, axis=-1)                     # (T, R)
-        xs["fut"] = jnp.min(
-            fc[:, :, :defer_max_h] * arrs["region_pue"][None, :, None],
-            axis=(1, 2))                                          # (T,)
+        # node-less regions masked (their fc * inf sentinel would be NaN
+        # when the clamped forecast is exactly 0)
+        rp_ok = jnp.isfinite(arrs["region_pue"])
+        xs["fut"] = jnp.min(jnp.where(
+            rp_ok[None, :, None],
+            fc[:, :, :defer_window] * arrs["region_pue"][None, :, None],
+            jnp.inf), axis=(1, 2))                                # (T,)
+        if planner:
+            # green-window planner signals, batched over all epochs (the
+            # host loop computes the same reduction via
+            # ``_lookahead_signals`` so both drivers read identical f32
+            # forecast signals)
+            la_ci, gw_min = forecast.green_window_signals(
+                fc, arrs["region_pue"], pcfg.lookahead_h, pcfg.discount)
+            xs["la_ci"] = la_ci                                   # (T, R)
+            xs["la_dst"] = jnp.min(
+                jnp.where(rp_ok[None, :],
+                          la_ci * arrs["region_pue"][None, :],
+                          jnp.inf), axis=-1)                      # (T,)
+            xs["gw_min"] = gw_min                                 # (T,)
 
     def body(carry, xs):
         (cap, njobs, slot_jid, slot_node, slot_end, defer_ids, mig_cost,
@@ -732,8 +894,17 @@ def _scan_trajectory(arrs, statics, dims):
             rate_cur = take(rate, slot_node, stay_mask, jnp.inf)
             remaining = jnp.maximum(slot_end - t, 0).astype(jnp.float32)
             chips_f = s_chips.astype(jnp.float32)
-            benefit = (rate_cur - br) * e_kwh_h * chips_f * remaining
-            gain = benefit - ckpt_kwh * chips_f * rate_cur
+            la_kw = {}
+            if planner:
+                la_node = xs["la_ci"][ridx] * pue            # (N,) f32
+                la_kw = dict(
+                    src_la=take(la_node, slot_node, stay_mask,
+                                jnp.float32(0.0)),
+                    dst_la=xs["la_dst"], gw_min=xs["gw_min"])
+            gain = policylib.migration_gain(
+                jnp, pcfg, rate_cur=rate_cur, best_rate=br, chips=chips_f,
+                remaining=remaining, e_kwh_h=e_kwh_h,
+                ckpt=ckpt_kwh * chips_f, **la_kw)
             mk1 = jnp.where(stay_mask, -gain, jnp.inf)
             mk2 = jnp.where(stay_mask, slot_jid, INT_MAX)
             _, _, mig_slot = jax.lax.sort((mk1, mk2, arange_s), num_keys=2)
@@ -795,7 +966,8 @@ def _scan_trajectory(arrs, statics, dims):
         cur_rate = jnp.min(jnp.where(healthy, ci_col * pue, jnp.inf))
 
         # ---- 4. record outcomes --------------------------------------
-        green = fut_rate < jnp.float32(0.95) * cur_rate
+        green = policylib.wants_defer(
+            fut_rate, cur_rate, jnp.float32(pcfg.defer_green_factor))
         placed_t = jnp.int32(0)
         dropped_t = jnp.int32(0)
         if m_cap > 0:
@@ -816,7 +988,34 @@ def _scan_trajectory(arrs, statics, dims):
         nnode = out[NARR:]
         valid = narr_jid >= 0
         jsafe = jnp.maximum(narr_jid, 0)
-        if has_defer:
+        if has_defer and slo:
+            # SLO deferral: candidates that want to wait (green for THEIR
+            # value-tightened threshold, or unplaced, inside their own
+            # slack window) compete for the fixed-capacity priority queue
+            # on the shared (value asc, deadline desc, jid) key — same
+            # admission and storage order as the host's lexsort
+            in_win = (t - arrive_d[jsafe]) < slack_d[jsafe]
+            can_defer = valid & (slack_d[jsafe] > 0) & in_win
+            green_j = policylib.wants_defer(fut_rate, cur_rate,
+                                            thresh_d[jsafe])
+            want = can_defer & jnp.where(nnode >= 0, green_j, True)
+            k1 = jnp.where(want, value_d[jsafe], jnp.inf)
+            k2 = jnp.where(want, -deadline_d[jsafe], INT_MAX)
+            k3 = jnp.where(want, narr_jid, INT_MAX)
+            k1s, _, _, perm = jax.lax.sort((k1, k2, k3, arange_e),
+                                           num_keys=3)
+            sel_ok = jnp.isfinite(k1s[:d_cap])
+            sel_idx = perm[:d_cap]
+            defer_again = jnp.zeros((n_narr,), bool).at[
+                jnp.where(sel_ok, sel_idx, n_narr)].set(True, mode="drop")
+            takeback = defer_again & (nnode >= 0)
+            cap2 = cap2.at[jnp.where(takeback, nnode, N)].add(
+                narr_chips, mode="drop")
+            deferred_t = jnp.sum(defer_again.astype(jnp.int32))
+            # the queue carries in priority order (urgent overflow placed
+            # this epoch, not dropped — no overflow accounting by design)
+            defer_ids = jnp.where(sel_ok, narr_jid[sel_idx], -1)
+        elif has_defer:
             in_win = (t - arrive_d[jsafe]) < defer_max_h
             can_defer = valid & defer_d[jsafe] & in_win
             takeback = can_defer & green & (nnode >= 0)
@@ -835,6 +1034,17 @@ def _scan_trajectory(arrs, statics, dims):
             deferred_t = jnp.int32(0)
         place_new = valid & (nnode >= 0) & ~takeback
         drop_new = valid & (nnode < 0) & ~defer_again
+        # a dropped job is a deadline miss only if it ever HAD start slack
+        # (host counts via pol.slack > 0, which is defer_max_h-gated for
+        # the reactive policy — mirror that, or the counters drift at
+        # defer_max_h == 0)
+        if slo:
+            slackable = slack_d[jsafe] > 0
+        elif defer_max_h > 0:
+            slackable = defer_d[jsafe]
+        else:
+            slackable = jnp.zeros(jsafe.shape, bool)
+        miss_t = jnp.sum((drop_new & slackable).astype(jnp.int32))
         free_idx = jnp.nonzero(slot_jid < 0, size=alloc_cap,
                                fill_value=S)[0]
         rank = jnp.cumsum(place_new.astype(jnp.int32)) - 1
@@ -862,7 +1072,7 @@ def _scan_trajectory(arrs, statics, dims):
         carry = (cap2, njobs, slot_jid, slot_node, slot_end, defer_ids,
                  mig_cost + mig_cost_t, overflow)
         ys = (e_t, n_sw, completed_t, dropped_t, placed_t, deferred_t,
-              migrations_t, evictions_t, mov_jid, ys_mov_node,
+              migrations_t, evictions_t, miss_t, mov_jid, ys_mov_node,
               jnp.where(place_new, narr_jid, -1),
               jnp.where(place_new, nnode, -1))
         return carry, ys
@@ -876,7 +1086,8 @@ def _scan_trajectory(arrs, statics, dims):
 
 def simulate_fleet_scan(fleet0: Fleet, region_ci: np.ndarray,
                         ridx: np.ndarray, cfg: SimConfig,
-                        jobs: Optional[JobSchedule] = None) -> SimResult:
+                        jobs: Optional[JobSchedule] = None, *,
+                        pad_plan: bool = False) -> SimResult:
     """``simulate_fleet`` with the epoch loop compiled as ONE ``lax.scan``.
 
     Same trajectory semantics as the host loop for
@@ -905,9 +1116,14 @@ def simulate_fleet_scan(fleet0: Fleet, region_ci: np.ndarray,
     N, T = fleet0.n, cfg.epochs
     jobs = jobs if jobs is not None else generate_jobs(cfg)
     J = jobs.n
-    plan = _scan_plan(cfg, jobs)
+    pol = Policy.for_jobs(cfg.policy, jobs.arrive, jobs.deferrable,
+                          cfg.defer_max_h, jobs.deadline, jobs.value)
+    plan = _scan_plan(cfg, jobs, pol, pad=pad_plan)
 
-    Jp = max(J, 1)
+    # ``pad_plan`` also buckets the job-table width so seed ensembles with
+    # slightly different schedules reuse one compiled trajectory (padded
+    # jobs arrive past the horizon and are never touched)
+    Jp = _pad_bucket(max(J, 1)) if pad_plan else max(J, 1)
 
     def jconst(x, fill, dtype):
         out = np.full(Jp, fill, dtype)
@@ -946,14 +1162,21 @@ def simulate_fleet_scan(fleet0: Fleet, region_ci: np.ndarray,
         deferrable=jconst(jobs.deferrable, False, bool),
         arr_ids=jnp.asarray(plan.arr_ids),
     )
+    if pol.slo:
+        arrs.update(
+            slack=jconst(pol.slack, 0, np.int32),
+            thresh=jconst(pol.thresh, 1.0, np.float32),
+            value=jconst(pol.value, np.inf, np.float32),
+            deadline=jconst(pol.deadline_ep, 0, np.int32))
     statics = (cfg.engine, cfg.shortlist, cfg.use_kernel, cfg.weights,
                cfg.horizon_h, cfg.history_h, cfg.use_forecast,
-               cfg.defer_max_h)
+               pol.defer_window(cfg.defer_max_h))
     dims = (T, plan.slots, plan.a_max, plan.d_cap, plan.rel_cap,
             plan.m_evict, cfg.migration_budget, int(np.max(jobs.chips,
                                                            initial=1)),
             cfg.history_h, cfg.defer_max_h, cfg.outage, cfg.power_off_idle,
-            float(cfg.consolidate), float(cfg.migration_overhead_h))
+            float(cfg.consolidate), float(cfg.migration_overhead_h),
+            cfg.policy.graph_key())
     carry, ys = jax.block_until_ready(_scan_trajectory(arrs, statics, dims))
     (cap_f, njobs_f, slot_jid_f, _, _, defer_f, mig_cost_f,
      overflow_f) = carry
@@ -965,8 +1188,8 @@ def simulate_fleet_scan(fleet0: Fleet, region_ci: np.ndarray,
             f" rel_cap={plan.rel_cap}, m_evict={plan.m_evict})) — bound"
             f" violated; please report")
     (e_t, n_sw, completed_t, dropped_t, placed_t, deferred_t, mig_t,
-     evi_t, mov_jid, mov_node, new_jid, new_node) = [np.asarray(y)
-                                                     for y in ys]
+     evi_t, miss_t, mov_jid, mov_node, new_jid, new_node) = [np.asarray(y)
+                                                             for y in ys]
     series = e_t.astype(np.float64)
     # replay the per-event placement log chronologically: within an epoch
     # movers precede new arrivals (host step-4 order); a job appears at
@@ -981,8 +1204,21 @@ def simulate_fleet_scan(fleet0: Fleet, region_ci: np.ndarray,
     first_node[uniq] = n_m[first_idx]
     uniq_r, last_idx = np.unique(j_m[::-1], return_index=True)
     node_log[uniq_r] = n_m[::-1][last_idx]
-    # jobs still waiting in the deferral queue never ran -> dropped
-    dropped = int(dropped_t.sum()) + int((np.asarray(defer_f) >= 0).sum())
+    # first placement always comes through the arrival stream, so the
+    # per-epoch new-arrival log rows give start epochs (and thereby the
+    # policy latency accounting: delay = start - arrive)
+    ep_rows = np.repeat(np.arange(T, dtype=np.int64), new_jid.shape[1])
+    nmask = (new_jid.ravel() >= 0) & (new_node.ravel() >= 0)
+    start_epoch = np.full(J, -1, np.int64)
+    uniq_s, first_s = np.unique(new_jid.ravel()[nmask], return_index=True)
+    start_epoch[uniq_s] = ep_rows[nmask][first_s]
+    started = start_epoch >= 0
+    delay_h = int((start_epoch[started]
+                   - np.asarray(jobs.arrive)[started]).sum())
+    # jobs still waiting in the deferral queue never ran -> dropped (and
+    # every queued job has slack > 0 -> a deadline miss)
+    still_q = int((np.asarray(defer_f) >= 0).sum())
+    dropped = int(dropped_t.sum()) + still_q
     mig_cost = float(mig_cost_f)
     return SimResult(
         emissions_g=float(series.sum()) + mig_cost,
@@ -995,7 +1231,9 @@ def simulate_fleet_scan(fleet0: Fleet, region_ci: np.ndarray,
         migrations=int(mig_t.sum()),
         evictions=int(evi_t.sum()),
         node_log=node_log, first_node=first_node,
-        emissions_series=series)
+        emissions_series=series,
+        deadline_misses=int(miss_t.sum()) + still_q,
+        defer_delay_h=delay_h, start_epoch=start_epoch)
 
 
 # ---------------------------------------------------------------------------
@@ -1004,16 +1242,21 @@ def simulate_fleet_scan(fleet0: Fleet, region_ci: np.ndarray,
 
 
 def synthetic_lifecycle_fleet(n: int, cfg: SimConfig,
-                              chips_per_node: int = 256
+                              chips_per_node: int = 256,
+                              region: Optional[int] = None
                               ) -> Tuple[Fleet, np.ndarray, np.ndarray]:
     """(empty fleet, region CI traces, node->region map) for the simulator.
 
     Same statistical recipe as ``fleet.synthetic_fleet`` but capacity
     starts FULL (jobs arrive through the lifecycle) and the traces carry
-    ``history_h`` hours of warm-up for the forecaster."""
+    ``history_h`` hours of warm-up for the forecaster.  ``region`` pins
+    every node into one region — the single-region setting where temporal
+    shifting (deferral into green windows) is the only carbon lever,
+    spatial arbitrage being off the table (see EXPERIMENTS.md §Policy)."""
     rng = np.random.default_rng(cfg.seed)
     regions = list(telemetry.REGIONS.values())
-    ridx = rng.integers(0, len(regions), n)
+    ridx = rng.integers(0, len(regions), n) if region is None \
+        else np.full(n, int(region))
     hours = cfg.history_h + cfg.epochs + cfg.horizon_h + 1
     traces = np.stack([telemetry.hourly_ci(r, hours=hours, seed=cfg.seed + i)
                        for i, r in enumerate(regions)])
@@ -1033,6 +1276,89 @@ def synthetic_lifecycle_fleet(n: int, cfg: SimConfig,
         chips_total=jnp.full((n,), chips_per_node, jnp.int32),
     )
     return fleet, traces, ridx
+
+
+# ---------------------------------------------------------------------------
+# policy Pareto sweep harness
+# ---------------------------------------------------------------------------
+
+
+def sweep_policies(cfg: SimConfig, policies, *, n: int = 1024,
+                   seeds=(0,), chips_per_node: int = 256,
+                   region: Optional[int] = None) -> list:
+    """Run a seed ensemble per policy through the scanned core and return
+    flat records for the carbon-vs-latency Pareto study.
+
+    ``policies`` maps name -> ``PolicyConfig`` (dict or (name, cfg)
+    pairs); each (policy, seed) pair re-derives the fleet, traces and job
+    schedule from ``dataclasses.replace(cfg, seed=seed, policy=pcfg)`` and
+    runs ``simulate_fleet_scan`` with ``pad_plan=True`` — buffer shapes
+    are bucketed, so the grid shares compiled trajectories and a full
+    threshold x value sweep at N=4096/T=8760 costs seconds per point, not
+    a recompile per point (threshold/value knobs live in traced per-job
+    columns).  Latency is reported two ways: ``avg_start_delay_h`` (mean
+    placement delay over started jobs) and ``miss_rate`` (deadline misses
+    over slack-carrying jobs inside the horizon)."""
+    items = policies.items() if isinstance(policies, dict) else policies
+    records = []
+    fleet_cache: Dict[int, tuple] = {}   # fleet/traces depend on seed only
+    for name, pcfg in items:
+        for seed in seeds:
+            c = dataclasses.replace(cfg, seed=int(seed), policy=pcfg)
+            if int(seed) not in fleet_cache:
+                fleet_cache[int(seed)] = synthetic_lifecycle_fleet(
+                    n, c, chips_per_node=chips_per_node, region=region)
+            fleet, traces, ridx = fleet_cache[int(seed)]
+            jobs = generate_jobs(c)
+            r = simulate_fleet_scan(fleet, traces, ridx, c, jobs=jobs,
+                                    pad_plan=True)
+            pol = Policy.for_jobs(c.policy, jobs.arrive, jobs.deferrable,
+                                  c.defer_max_h, jobs.deadline, jobs.value)
+            in_h = np.asarray(jobs.arrive) < c.epochs
+            slo_jobs = int(((pol.slack > 0) & in_h).sum())
+            started = int((r.start_epoch >= 0).sum())
+            records.append({
+                "policy": name, "seed": int(seed), "n": n,
+                "epochs": c.epochs, "jobs": int(jobs.n),
+                "emissions_g": float(r.emissions_g),
+                "migration_cost_g": float(r.migration_cost_g),
+                "migrations": int(r.migrations),
+                "completed": int(r.jobs_completed),
+                "dropped": int(r.jobs_dropped),
+                "deferred": int(r.jobs_deferred),
+                "deadline_misses": int(r.deadline_misses),
+                "defer_delay_h": int(r.defer_delay_h),
+                "avg_start_delay_h": r.defer_delay_h / max(started, 1),
+                "miss_rate": r.deadline_misses / max(slo_jobs, 1),
+            })
+    return records
+
+
+def pareto_frontier(records: list, x: str = "avg_start_delay_h",
+                    y: str = "emissions_g") -> list:
+    """Seed-aggregate ``sweep_policies`` records per policy (mean) and
+    return the non-dominated carbon/latency frontier, sorted by ``x``
+    ascending — ``y`` is strictly decreasing along the result, so a
+    well-formed frontier is monotone by construction (the bench gate
+    checks exactly that on the emitted artifact)."""
+    by: Dict[str, list] = {}
+    for r in records:
+        by.setdefault(r["policy"], []).append(r)
+    pts = []
+    for name, rs in by.items():
+        p = {"policy": name,
+             "seeds": sorted(r["seed"] for r in rs),
+             "miss_rate": float(np.mean([r["miss_rate"] for r in rs]))}
+        p[x] = float(np.mean([r[x] for r in rs]))
+        p[y] = float(np.mean([r[y] for r in rs]))
+        pts.append(p)
+    pts.sort(key=lambda p: (p[x], p[y]))
+    front, best = [], np.inf
+    for p in pts:
+        if p[y] < best:
+            front.append(p)
+            best = p[y]
+    return front
 
 
 # ---------------------------------------------------------------------------
