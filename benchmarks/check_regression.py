@@ -12,6 +12,9 @@ Usage (one call per artifact kind):
     python benchmarks/check_regression.py --kind policy \
         --current BENCH_policy.json \
         --baseline benchmarks/baselines/BENCH_policy_smoke.json
+    python benchmarks/check_regression.py --kind ensemble \
+        --current BENCH_policy.json \
+        --baseline benchmarks/baselines/BENCH_policy_smoke.json
 
 Gates (exit 1 on any):
 - **parity breaks**: any parity flag false in the current artifact
@@ -26,6 +29,14 @@ Gates (exit 1 on any):
   longer no-worse than reactive at acceptance scale, SLO carbon/latency
   frontier non-monotone, or CO2-saving / deadline-miss metrics drifting
   past absolute slacks vs the committed baseline;
+- **ensemble regressions** (``--kind ensemble``, reads the ``ensemble``
+  block of BENCH_policy.json): per-trajectory batched-vs-sequential
+  parity (hard), and the batched sweep's speedup floor — warm >= 3x at
+  smoke scale, cold (compile included) >= 5x at acceptance scale — on
+  runs that sharded the ensemble axis over >1 device; single-device
+  runs report the speedup informationally (see EXPERIMENTS.md §Ensemble
+  for why the floor needs hardware lanes) and gate parity plus the
+  usual runtime-ratio check on the ensemble warm seconds;
 - **runtime regressions**: any matched runtime metric slower than baseline
   by more than ``--runtime-tol`` (default 1.5x).  Baselines carry numbers
   from the machine class that produced them; regenerate them (rerun the
@@ -131,6 +142,17 @@ def check_placement(base: dict, cur: dict, t: Table, tol: float) -> None:
         t.check_ratio(f"{tag} engine us/call",
                       b.get("engine", {}).get("us_per_call"),
                       c.get("engine", {}).get("us_per_call"), tol)
+        # engine="auto" contract: bit-parity with the explicit engines,
+        # and the heuristic must keep picking a within-noise-optimal
+        # engine (flags are machine-independent; the us/call ratio only
+        # activates once the committed baseline carries an "auto" block)
+        t.check_flag(f"{tag} auto parity",
+                     c.get("auto", {}).get("parity"))
+        t.check_flag(f"{tag} auto pick optimal (within 2x)",
+                     c.get("auto", {}).get("optimal_within_2x"))
+        t.check_ratio(f"{tag} auto us/call",
+                      b.get("auto", {}).get("us_per_call"),
+                      c.get("auto", {}).get("us_per_call"), tol)
 
 
 def check_sim(base: dict, cur: dict, t: Table, tol: float) -> None:
@@ -198,9 +220,50 @@ def check_policy(base: dict, cur: dict, t: Table, tol: float) -> None:
                       c.get("slo_miss_rate_max"), slack=0.02)
 
 
+def check_ensemble(base: dict, cur: dict, t: Table, tol: float) -> None:
+    """Batched-ensemble gates (the ``ensemble`` block bench_policy
+    records): per-trajectory parity with the sequential scan is a hard
+    flag.  The speedup floors — 3x warm at smoke scale, 5x cold
+    (compile included) at acceptance scale — bind only when the run had
+    devices to shard the ensemble axis over (``sharded``): on a single
+    XLA:CPU device the batch axis only carries the per-epoch fixed
+    costs (EXPERIMENTS.md §Ensemble: 1.5x at year scale, ~1x at smoke
+    scale, with ~2x run-to-run noise on shared CPUs), so there the
+    speedup is reported informationally and the binding gates are
+    parity plus the runtime-ratio check on the ensemble warm seconds."""
+    ens = cur.get("ensemble")
+    if not ens:
+        t.add("ensemble block", "-", None, FAIL,
+              "missing — rerun benchmarks/run.py policy with "
+              "ENSEMBLE_E != 0")
+        return
+    t.check_flag("ensemble per-trajectory parity", ens.get("parity"))
+    gate_scale = bool(ens.get("gate_scale"))
+    floor = 5.0 if gate_scale else 3.0
+    key = "speedup_cold" if gate_scale else "speedup_warm"
+    sp = ens.get(key)
+    label = ("ensemble speedup cold, incl. compile" if gate_scale
+             else "ensemble speedup warm")
+    if sp is None:
+        t.add(label, f">={floor}x", None, SKIP, "not recorded")
+    elif ens.get("sharded"):
+        t.add(label, f">={floor}x", round(sp, 2),
+              OK if sp >= floor else FAIL,
+              f"{'acceptance' if gate_scale else 'smoke'} floor on "
+              f"{ens.get('devices')} devices")
+    else:
+        t.add(label, f">={floor}x", round(sp, 2), SKIP,
+              "single device: floor not binding (speedup informational, "
+              "warm-seconds ratio below is the runtime gate)")
+    bens = base.get("ensemble", {})
+    t.check_ratio("ensemble warm s", bens.get("ens_warm_s"),
+                  ens.get("ens_warm_s"), tol)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--kind", choices=("sim", "placement", "policy"),
+    ap.add_argument("--kind",
+                    choices=("sim", "placement", "policy", "ensemble"),
                     required=True)
     ap.add_argument("--current", required=True)
     ap.add_argument("--baseline", required=True)
@@ -221,6 +284,8 @@ def main() -> int:
             check_placement(base, cur, t, args.runtime_tol)
         elif args.kind == "policy":
             check_policy(base, cur, t, args.runtime_tol)
+        elif args.kind == "ensemble":
+            check_ensemble(base, cur, t, args.runtime_tol)
         else:
             check_sim(base, cur, t, args.runtime_tol)
         if not t.rows:

@@ -81,7 +81,9 @@ def green_window_signals(fc: jax.Array, region_pue: jax.Array,
     """Green-window extraction over a region forecast tensor.
 
     ``fc`` is ``(..., R, H)`` forecast CI (any leading batch axes — the
-    scanned simulator passes the whole ``(T, R, H)`` trajectory tensor);
+    scanned simulator passes the whole ``(T, R, H)`` trajectory tensor,
+    and the batched ensemble vmaps an ``(E, T, R, H)`` grid over it, so
+    the reduction must stay shape-polymorphic in the leading axes);
     ``region_pue`` is the per-region representative PUE (``+inf`` rows for
     regions with no nodes, so they can never win a min).  Returns
 

@@ -91,6 +91,31 @@ import jax.numpy as jnp
 from repro.core.fleet import IDLE_POWER_FRAC, Fleet
 from repro.core.ranking import RankWeights
 
+# ``optimization_barrier`` (the rounding pin of the exact-parity scoring
+# path) has no batching rule in this jax version, which would bar the
+# whole engine from ``vmap`` — the batched ensemble simulator
+# (``simulator.simulate_fleet_ensemble``) maps the scanned core over a
+# (seed x policy) axis.  The barrier is elementwise identity per operand,
+# so the rule is pure pass-through: bind the primitive on the batched
+# operands and keep each operand's batch dim.  Registered idempotently so
+# newer jax versions that ship the rule win.
+def _register_barrier_batching() -> None:
+    try:
+        from jax._src.lax.lax import optimization_barrier_p
+        from jax.interpreters import batching
+    except ImportError:      # layout changed: assume the rule exists
+        return
+    if optimization_barrier_p in batching.primitive_batchers:
+        return
+
+    def _rule(args, dims):
+        return optimization_barrier_p.bind(*args), dims
+
+    batching.primitive_batchers[optimization_barrier_p] = _rule
+
+
+_register_barrier_batching()
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -306,7 +331,13 @@ def place_lifecycle_shortlist(fleet: Fleet, demands: jax.Array,
     where XLA:CPU lowers it as a full sort (~50x slower) — the decisive
     win for the scanned simulator.  Only valid for streams with no release
     events (the scanned core's layout); placements, sweep counts and all
-    tie-breaks are unchanged."""
+    tie-breaks are unchanged.
+
+    The batched-ensemble simulator does NOT run this loop under ``vmap``
+    (batched ``lax.cond`` executes both branches — every event would pay
+    the O(N) sweep — and jax's while-loop batching select-copies the
+    whole loop state per iteration); it drives the decision-identical
+    hand-batched engine ``place_lifecycle_batched`` below instead."""
     N, E = fleet.n, demands.shape[0]
     K = min(max(shortlist, 1), N)
     full_cover = K >= N          # shortlist == whole fleet: bound unused
@@ -466,3 +497,214 @@ def place_lifecycle_shortlist(fleet: Fleet, demands: jax.Array,
     return PlacementResult(node=out,
                            scores=_ctx_scores(cap, ctx, weights),
                            capacity=cap, n_sweeps=sweeps)
+
+
+# ---------------------------------------------------------------------------
+# hand-batched lifecycle engine: an explicit lane axis for the ensemble
+# ---------------------------------------------------------------------------
+
+
+def _one_score_b(cap_b, b, ctx, w: RankWeights):
+    """Per-lane O(1) rescore: lane l's node ``b[l]`` at free chips
+    ``cap_b[l]`` — the batched twin of ``_one_score``, bit-identical per
+    lane (the same barrier-pinned elementwise graph, gathered per lane)."""
+    lanes = jnp.arange(b.shape[0])
+    g = {k: (v[lanes, b][:, None] if k in _GATHERED else v)
+         for k, v in ctx.items()}
+    return _ctx_scores(cap_b[:, None], g, w)[:, 0]
+
+
+def place_lifecycle_batched(fleet: Fleet, demands: jax.Array,
+                            weights: RankWeights = RankWeights(),
+                            horizon_h: float = 1.0, *,
+                            engine: str = "shortlist", shortlist: int = 32,
+                            capacity: Optional[jax.Array] = None,
+                            n_events: Optional[jax.Array] = None):
+    """Arrival-only lifecycle placement over an explicit leading lane axis
+    — the batched-ensemble twin of ``place_lifecycle_shortlist`` (with
+    ``eager_sweep``) and ``place_lifecycle_full_rerank``.
+
+    ``fleet`` carries ``(L, N)`` leaves (L ensemble lanes), ``demands``
+    is ``(L, E)`` arrival chips (pads 0), ``capacity`` the ``(L, N)``
+    post-release starting capacity, ``n_events`` the ``(L,)`` compacted
+    arrival counts.  Returns ``(node (L, E), capacity (L, N),
+    n_sweeps (L,))`` — **decision-identical per lane** to running the
+    sequential engine on that lane: same shortlist/bound predicates, same
+    tie-breaks, same sweep counts.
+
+    Why not just ``vmap`` the sequential engine: batched ``lax.cond``
+    executes BOTH branches, so every event would pay the O(N) sweep +
+    top-k, and jax's while-loop batching select-copies the entire loop
+    state every iteration.  This implementation instead runs two nested
+    ``while_loop``s with SCALAR (any-reduced) conditions and explicit
+    per-lane masks:
+
+    - the **inner walk** consumes events with O(K) shortlist work per
+      lane per step — a lane whose event needs a fresh sweep *stalls*
+      (its pointer stops advancing);
+    - the **outer round** performs ONE batched O(L·N) sweep + top-k and
+      lands every stalled lane's event from it (on that lane's current
+      capacity — exactly the tensor the sequential engine would have
+      computed at that event), then resumes the walk.
+
+    O(N) work therefore happens ~sweep-count times per epoch for the
+    whole ensemble, and the per-event ops amortize their dispatch
+    overhead across lanes — the enabling structure for
+    ``simulator.simulate_fleet_ensemble``.  The shortlist top-k merge is
+    the batched ``lax.top_k`` (jnp scoring path; the Pallas kernel sweep
+    stays sequential-only)."""
+    L, N = fleet.capacity.shape
+    E = demands.shape[1]
+    K = min(max(shortlist, 1), N)
+    k_cand = min(K + 1, N)
+    full_cover = K >= N
+    INF = jnp.float32(jnp.inf)
+    lanes = jnp.arange(L)
+    karange = jnp.arange(K)
+    ctx = jax.vmap(lambda f: frozen_ctx(f, weights, horizon_h))(fleet)
+    # (L,) normalizer scalars broadcast against (L, N) score columns
+    ctx = {k: (v[:, None] if v.ndim == 1 else v) for k, v in ctx.items()}
+    cap0 = fleet.capacity if capacity is None else capacity
+    healthy = fleet.healthy
+    n_ev = jnp.full((L,), E, jnp.int32) if n_events is None else n_events
+    hmax = lambda cap: jnp.max(jnp.where(healthy, cap, 0), axis=1)
+
+    def ev_demand(ptr):
+        p = jnp.minimum(ptr, E - 1)
+        return p, jnp.take_along_axis(demands, p[:, None], 1)[:, 0]
+
+    def keep_out(out, p):
+        return jnp.take_along_axis(out, p[:, None], 1)[:, 0]
+
+    if engine == "full":
+        # full-rerank oracle: every arrival is one batched O(L·N) rescore
+        # + masked argmin — no branch structure to restructure
+        def fbody(e, st):
+            cap, out, sweeps = st
+            d = demands[:, e]
+            live = (e < n_ev) & (d > 0)
+            scores = _ctx_scores(cap, ctx, weights)
+            masked = jnp.where((cap >= d[:, None]) & healthy, scores, INF)
+            best = jnp.argmin(masked, axis=1).astype(jnp.int32)
+            ok = live & jnp.isfinite(
+                jnp.take_along_axis(masked, best[:, None], 1)[:, 0])
+            cap = cap.at[lanes, best].add(jnp.where(ok, -d, 0))
+            out = out.at[lanes, e].set(jnp.where(ok, best, out[:, e]))
+            return cap, out, sweeps + live.astype(jnp.int32)
+
+        cap, out, sweeps = jax.lax.fori_loop(
+            0, jnp.max(n_ev), fbody,
+            (cap0, jnp.full((L, E), -1, jnp.int32),
+             jnp.zeros((L,), jnp.int32)))
+        return out, cap, sweeps
+
+    def sweep_topk(cap):
+        scores = _ctx_scores(cap, ctx, weights)
+        neg, idx = jax.lax.top_k(-scores, k_cand)
+        return scores, -neg, idx.astype(jnp.int32)
+
+    def split_shortlist(cand_s, cand_i):
+        if full_cover:
+            return (cand_s[:, :K], cand_i[:, :K],
+                    jnp.full((L,), INF), jnp.full((L,), N, jnp.int32))
+        return cand_s[:, :K], cand_i[:, :K], cand_s[:, K], cand_i[:, K]
+
+    # The inner walk never touches the (L, N) capacity array: feasibility
+    # inside a round only consults SHORTLIST nodes (the resident ``slcap``
+    # mirror of ``cap[sl_i]``, updated in O(1) per placement) and the
+    # round-static ``cap_max`` upper bound — exactly the sequential
+    # engine's invariant.  Placements are applied to ``cap`` as one
+    # deferred scatter at the round boundary (disjoint single-node edits,
+    # so the deferral is exact), keeping the per-event while carry at
+    # O(L·K) + the output row instead of O(L·N).
+
+    def inner_cond(c):
+        return jnp.any((c[3] < n_ev) & ~c[4])
+
+    def make_inner(sl_i, slh, bound_s, bound_i, cap_max, dirty):
+        """Inner step closed over the round-static shortlist identity —
+        only scores/capacities of shortlist entries evolve mid-round."""
+
+        def inner_step(c):
+            out, slcap, sl_s, ptr, need = c
+            act = (ptr < n_ev) & ~need
+            p, d = ev_demand(ptr)
+            is_arr = act & (d > 0)
+            sm = jnp.where((slcap >= d[:, None]) & slh, sl_s, INF)
+            m = jnp.min(sm, axis=1)
+            kbest = jnp.argmin(jnp.where(sm == m[:, None], sl_i, N),
+                               axis=1)
+            bnode = jnp.take_along_axis(sl_i, kbest[:, None], 1)[:, 0]
+            feasible = jnp.isfinite(m)
+            beats = (m < bound_s) | ((m == bound_s) & (bnode < bound_i))
+            use_sl = (~dirty) & feasible & beats
+            dead = (d > cap_max) | ((~dirty) & (~feasible)
+                                    & (~jnp.isfinite(bound_s)))
+            place_sl = is_arr & use_sl
+            stall = is_arr & (~use_sl) & (~dead)
+            cap_b = jnp.take_along_axis(slcap, kbest[:, None], 1)[:, 0] - d
+            new_s = _one_score_b(cap_b, bnode, ctx, weights)
+            hit = place_sl[:, None] & (karange[None, :] == kbest[:, None])
+            sl_s = jnp.where(hit, new_s[:, None], sl_s)
+            slcap = jnp.where(hit, slcap - d[:, None], slcap)
+            out = out.at[lanes, p].set(jnp.where(place_sl, bnode,
+                                                 keep_out(out, p)))
+            ptr = jnp.where(act & ~stall, ptr + 1, ptr)
+            return out, slcap, sl_s, ptr, need | stall
+
+        return inner_step
+
+    def outer_cond(st):
+        return jnp.any((st[10] < n_ev) | st[12])
+
+    def outer_body(st):
+        (cap, out, slcap, sl_s, sl_i, bound_s, bound_i, cap_max, sweeps,
+         dirty, ptr, ptr0, need) = st
+        slh = jnp.take_along_axis(healthy, sl_i, 1)
+        out, slcap, sl_s, ptr, need = jax.lax.while_loop(
+            inner_cond, make_inner(sl_i, slh, bound_s, bound_i, cap_max,
+                                   dirty),
+            (out, slcap, sl_s, ptr, need))
+        # apply the walk's placements (events [ptr0, ptr) that landed) to
+        # the full capacity as ONE scatter of disjoint single-node edits
+        seg = jnp.arange(E, dtype=jnp.int32)[None, :]
+        newly = (seg >= ptr0[:, None]) & (seg < ptr[:, None]) & (out >= 0)
+        cap = cap.at[lanes[:, None], jnp.clip(out, 0, N - 1)].add(
+            jnp.where(newly, -demands, 0))
+        # one fresh sweep per round — the tensors ``land_from`` computes,
+        # applied only on stalled lanes (at their own current capacity)
+        scores, cand_s, cand_i = sweep_topk(cap)
+        p, d = ev_demand(ptr)
+        masked = jnp.where((cap >= d[:, None]) & healthy, scores, INF)
+        best = jnp.argmin(masked, axis=1).astype(jnp.int32)
+        ok = jnp.isfinite(
+            jnp.take_along_axis(masked, best[:, None], 1)[:, 0])
+        cap_b = jnp.take_along_axis(cap, best[:, None], 1)[:, 0] - d
+        new_s = _one_score_b(cap_b, best, ctx, weights)
+        sl_s2, sl_i2, bound_s2, bound_i2 = split_shortlist(cand_s, cand_i)
+        sl_s2 = jnp.where(ok[:, None] & (sl_i2 == best[:, None]),
+                          new_s[:, None], sl_s2)
+        cm2 = hmax(cap)                  # pre-placement, as in land_from
+        out = out.at[lanes, p].set(jnp.where(
+            need, jnp.where(ok, best, -1), keep_out(out, p)))
+        cap = cap.at[lanes, best].add(jnp.where(need & ok, -d, 0))
+        slcap2 = jnp.take_along_axis(cap, sl_i2, 1)
+        pick = lambda a, b: jnp.where(need, a, b)
+        pick2 = lambda a, b: jnp.where(need[:, None], a, b)
+        ptr = jnp.where(need, ptr + 1, ptr)
+        return (cap, out, pick2(slcap2, slcap), pick2(sl_s2, sl_s),
+                pick2(sl_i2, sl_i),
+                pick(bound_s2, bound_s), pick(bound_i2, bound_i),
+                pick(cm2, cap_max), sweeps + need.astype(jnp.int32),
+                dirty & ~need, ptr, ptr,
+                jnp.zeros_like(need))
+
+    st = (cap0, jnp.full((L, E), -1, jnp.int32),
+          jnp.take_along_axis(cap0, jnp.full((L, K), N - 1, jnp.int32), 1),
+          jnp.full((L, K), INF), jnp.full((L, K), N, jnp.int32),
+          jnp.full((L,), INF), jnp.full((L,), N, jnp.int32),
+          hmax(cap0), jnp.zeros((L,), jnp.int32),
+          jnp.ones((L,), bool), jnp.zeros((L,), jnp.int32),
+          jnp.zeros((L,), jnp.int32), jnp.zeros((L,), bool))
+    st = jax.lax.while_loop(outer_cond, outer_body, st)
+    return st[1], st[0], st[8]

@@ -103,18 +103,21 @@ class PolicyConfig:
     def graph_key(self) -> "PolicyConfig":
         """Canonical copy with every graph-irrelevant knob pinned, for use
         as the scanned core's jit-static: sweep grid points whose knobs
-        reach the traced graph only through per-job columns
-        (``value_weight``/``queue_cap``/deadline draws always;
-        ``defer_green_factor`` under SLO, where the per-job ``thresh``
-        column carries it; the planner knobs under reactive migration)
-        then hash to the SAME static and share one compiled trajectory —
-        the compile-sharing ``sweep_policies`` advertises."""
+        reach the traced graph only through traced per-run data
+        (``value_weight``/``queue_cap``/deadline draws via per-job
+        columns; ``defer_green_factor`` via the per-run ``green_factor``
+        scalar or, under SLO, the per-job ``thresh`` column;
+        ``green_gate`` via the per-run ``green_gate`` scalar) then hash
+        to the SAME static and share one compiled trajectory — the
+        compile-sharing ``sweep_policies`` and the batched ensemble
+        (``simulator.simulate_fleet_ensemble``) both rely on it.  Only
+        ``migration``/``deferral`` (graph structure) and
+        ``lookahead_h``/``discount`` under the planner (forecast-tensor
+        shape/weights) remain graph-relevant."""
         kw = dict(value_weight=0.0, queue_cap=0, deadline_lo=1,
-                  deadline_hi=0)
-        if self.deferral == "slo":
-            kw["defer_green_factor"] = 0.0
+                  deadline_hi=0, defer_green_factor=0.0, green_gate=1.4)
         if self.migration != "lookahead":
-            kw.update(lookahead_h=12, discount=0.9, green_gate=1.4)
+            kw.update(lookahead_h=12, discount=0.9)
         return dataclasses.replace(self, **kw)
 
 
@@ -147,7 +150,7 @@ def slo_deferral(defer_green_factor: float = 0.95,
 
 def migration_gain(xp, pcfg: PolicyConfig, *, rate_cur, best_rate, chips,
                    remaining, e_kwh_h, ckpt, src_la=None, dst_la=None,
-                   gw_min=None):
+                   gw_min=None, green_gate=None):
     """Per-job migration gain in gCO2 (positive => worth moving).
 
     Reactive: persist-the-present — the CFP-rate spread between the job's
@@ -166,13 +169,19 @@ def migration_gain(xp, pcfg: PolicyConfig, *, rate_cur, best_rate, chips,
     greenest moment inside the look-ahead window does the gain survive
     (otherwise -inf — wait for the window instead of moving into a
     transient).  ``best_rate`` stays the capacity-feasible reactive bound,
-    so a gated move is always landable."""
+    so a gated move is always landable.
+
+    ``green_gate`` overrides ``pcfg.green_gate``: the scanned core passes
+    its traced per-run float32 scalar (so gate grids share one compiled
+    trajectory — see ``PolicyConfig.graph_key``); the host loop omits it
+    and keeps the historical f64 constant."""
     if pcfg.migration == "reactive" or src_la is None:
         benefit = (rate_cur - best_rate) * e_kwh_h * chips * remaining
         return benefit - ckpt * rate_cur
     benefit = (src_la - dst_la) * e_kwh_h * chips * remaining
     gain = benefit - ckpt * rate_cur
-    gate = best_rate <= pcfg.green_gate * gw_min
+    gg = pcfg.green_gate if green_gate is None else green_gate
+    gate = best_rate <= gg * gw_min
     return xp.where(gate, gain, -xp.inf)
 
 

@@ -98,10 +98,39 @@ class Placement:
     n_sweeps: Optional[jax.Array] = None   # () int32 full rank sweeps
 
 
+# Above this N/J the full re-rank's O(J·N) rescore traffic outweighs the
+# shortlist engine's per-event loop overhead even on XLA:CPU; below it —
+# the entire measured grid, N<=262144 x J<=256 — full re-rank is the
+# faster CPU path (see _auto_engine and BENCH_placement.json "auto").
+_AUTO_FULL_MAX_N_PER_JOB = 65536
+
+
+def _auto_engine(n: int, j: int, use_kernel: bool = False) -> str:
+    """Resolve ``engine="auto"``: pick the engine that is actually faster
+    for this (backend, N, J) so default callers never fall off the
+    shortlist engine's small-N cliff.
+
+    The fused shortlist engine's win is measured in rank sweeps — the
+    memory-bound currency on accelerators — so it stays the choice for
+    the Pallas kernel path and any non-CPU backend.  On the XLA:CPU jnp
+    path, the engine's in-loop ``lax.top_k`` lowers as a full sort under
+    ``lax.cond`` (~50x slower, see ``repro.core.placement``), and the
+    measured grid (BENCH_placement.json: N=4096 engine 112.8 ms vs full
+    5.6 ms/call at J=256; full faster at every point up to N=262144)
+    shows the O(J·N) full re-rank winning everywhere a job list of
+    realistic size is placed — the crossover only arrives when N/J grows
+    past ``_AUTO_FULL_MAX_N_PER_JOB`` and per-job full sweeps become the
+    bandwidth bottleneck."""
+    if use_kernel or jax.default_backend() != "cpu":
+        return "shortlist"
+    return "shortlist" if n // max(j, 1) > _AUTO_FULL_MAX_N_PER_JOB \
+        else "full"
+
+
 def place_jobs(fleet: Fleet, demands: jax.Array,
                weights: RankWeights = RankWeights(),
                horizon_h: float = 1.0, *,
-               engine: str = "shortlist", shortlist: int = 32,
+               engine: str = "auto", shortlist: int = 32,
                use_kernel: bool = False) -> Placement:
     """Greedy: jobs in given order take the best-ranked node with capacity.
 
@@ -117,9 +146,14 @@ def place_jobs(fleet: Fleet, demands: jax.Array,
 
     The win is measured in rank sweeps (the memory-bound quantity on TPU:
     5 vs 256 at N=65536, J=256 — see BENCH_placement.json).  On CPU with
-    the jnp scoring path and large J, per-job loop overhead can exceed the
-    sweep savings; ``engine="full"`` remains available for that regime.
+    the jnp scoring path, per-job loop overhead exceeds the sweep savings
+    at every measured size, so the default ``engine="auto"`` resolves to
+    whichever engine is faster for this (backend, N, J) — see
+    ``_auto_engine``; placements are bit-identical either way, only the
+    ``n_sweeps`` accounting differs.
     """
+    if engine == "auto":
+        engine = _auto_engine(fleet.n, demands.shape[0], use_kernel)
     if engine == "shortlist":
         r = placement.place_jobs_shortlist(
             fleet, demands, weights, horizon_h, shortlist=shortlist,
@@ -140,7 +174,7 @@ place_jobs_jit = jax.jit(place_jobs,
 def place_events(fleet: Fleet, demands: jax.Array, nodes: jax.Array,
                  weights: RankWeights = RankWeights(),
                  horizon_h: float = 1.0, *,
-                 engine: str = "shortlist", shortlist: int = 32,
+                 engine: str = "auto", shortlist: int = 32,
                  use_kernel: bool = False,
                  interpret: Optional[bool] = None,
                  capacity: Optional[jax.Array] = None,
@@ -165,7 +199,10 @@ def place_events(fleet: Fleet, demands: jax.Array, nodes: jax.Array,
     the loop (valid for release-free streams only — see
     ``placement.place_lifecycle_shortlist``).  ``interpret``
     forces/disables Pallas interpret mode for ``use_kernel=True``
-    (None = auto by backend)."""
+    (None = auto by backend).  ``engine="auto"`` (default) resolves per
+    ``_auto_engine`` — bit-identical placements either way."""
+    if engine == "auto":
+        engine = _auto_engine(fleet.n, demands.shape[0], use_kernel)
     if engine == "shortlist":
         r = placement.place_lifecycle_shortlist(
             fleet, demands, nodes, weights, horizon_h, shortlist=shortlist,

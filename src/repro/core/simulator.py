@@ -59,6 +59,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -69,7 +70,8 @@ from repro.core import forecast, telemetry
 from repro.core import policy as policylib
 from repro.core.carbon import job_energy_kwh
 from repro.core.fleet import IDLE_POWER_FRAC, Fleet
-from repro.core.placement import (place_lifecycle_full_rerank,
+from repro.core.placement import (place_lifecycle_batched,
+                                  place_lifecycle_full_rerank,
                                   place_lifecycle_shortlist)
 from repro.core.policy import Policy, PolicyConfig
 from repro.core.ranking import RankWeights
@@ -745,10 +747,22 @@ def _scan_plan(cfg: SimConfig, jobs: JobSchedule, pol: Policy,
                     m_evict=m_evict, arr_ids=arr_ids)
 
 
-@functools.partial(jax.jit, static_argnames=("statics", "dims"))
-def _scan_trajectory(arrs, statics, dims):
+def _traj_scan(arrs, statics, dims, ensemble: bool):
     """The whole trajectory as one ``lax.scan``: fixed-size slot table +
     padded event buffers around the shared ``_place_epoch`` epoch graph.
+
+    The epoch body is split into ``epoch_pre`` (releases, evictions +
+    migration policy, event-stream build) and ``epoch_post`` (outcome
+    recording, deferral queues, emission accounting) around the
+    placement event loop.  Both halves are loop-free masked tensor ops,
+    so the batched ensemble (``ensemble=True``) maps them over a leading
+    lane axis with a plain ``vmap`` and drives the hand-batched
+    placement engine (``placement.place_lifecycle_batched``) in between
+    — one compiled scan for the whole (seed x policy) grid, with O(N)
+    sweep work per sweep-round instead of per event (vmapping the
+    sequential engine would execute both ``lax.cond`` branches per
+    event).  ``ensemble=False`` is the unchanged sequential core:
+    identical ops, one trajectory.
 
     Hot-path structure (all bitwise-neutral vs the host loop's per-epoch
     graph):
@@ -765,7 +779,9 @@ def _scan_trajectory(arrs, statics, dims):
     (T, S, a_max, d_cap, rel_cap, m_evict, budget, chips_max, history_h,
      defer_max_h, outage, power_off_idle, consolidate, overhead_h,
      pcfg) = dims
-    N = arrs["capacity"].shape[0]
+    N = arrs["capacity"].shape[-1]
+    engine, shortlist = statics[0], statics[1]
+    weights = statics[3]
     horizon_h, use_forecast = statics[4], statics[6]
     defer_window = statics[7]
     budget = min(budget, S)     # can't migrate more jobs than can be active
@@ -776,21 +792,20 @@ def _scan_trajectory(arrs, statics, dims):
     NARR = m_cap                # event stream: [mover arrivals | new]
     has_defer = d_cap > 0
     alloc_cap = min(S, n_narr)
+    EV = m_cap + n_narr         # padded event-buffer width
     INT_MAX = jnp.int32(2 ** 31 - 1)
     arange_s = jnp.arange(S, dtype=jnp.int32)
     # f32 mirrors of the host's f64 job_energy_kwh constants (linear in
     # chips: watts = chips * (CHIP + HOST/8))
     e_kwh_h = jnp.float32(float(job_energy_kwh(3600.0, 1, 1)))
     ckpt_kwh = jnp.float32(float(job_energy_kwh(overhead_h * 3600.0, 1, 1)))
-    traces, ridx = arrs["traces"], arrs["ridx"]
-    pue, power_kw = arrs["pue"], arrs["power_kw"]
-    chips_total, flops_per_j = arrs["chips_total"], arrs["flops_per_j"]
-    chips_d, dur_d = arrs["chips"], arrs["duration"]
-    arrive_d, defer_d = arrs["arrive"], arrs["deferrable"]
     if slo:
-        slack_d, thresh_d = arrs["slack"], arrs["thresh"]
-        value_d, deadline_d = arrs["value"], arrs["deadline"]
         arange_e = jnp.arange(n_narr, dtype=jnp.int32)
+        # effective queue capacity: a traced per-run scalar <= the static
+        # buffer width d_cap, so ensemble members with different (semantic)
+        # SLO queue caps share one compiled trajectory; the sequential
+        # path passes q_cap == d_cap, making the mask an exact no-op
+        arange_d = jnp.arange(d_cap, dtype=jnp.int32)
     ts = jnp.arange(T, dtype=jnp.int32)
 
     def take(arr, idx, valid, fill):
@@ -798,40 +813,53 @@ def _scan_trajectory(arrs, statics, dims):
         v = arr[jnp.clip(idx, 0, arr.shape[0] - 1)]
         return jnp.where(valid, v, fill)
 
-    # hoisted forecast: identical per-window math as _epoch_core, vmapped
-    # over epochs (the windows depend only on the constant traces)
-    xs = {"t": ts, "arr": arrs["arr_ids"]}
-    if use_forecast:
-        wins = jax.vmap(lambda t: jax.lax.dynamic_slice_in_dim(
-            traces, t, history_h, axis=1))(ts)
-        fc = jax.vmap(
-            lambda w: forecast.forecast_regions(w, horizon_h, 0)[0])(wins)
-        xs["ci_fc_r"] = jnp.mean(fc, axis=-1)                     # (T, R)
-        # node-less regions masked (their fc * inf sentinel would be NaN
-        # when the clamped forecast is exactly 0)
-        rp_ok = jnp.isfinite(arrs["region_pue"])
-        xs["fut"] = jnp.min(jnp.where(
-            rp_ok[None, :, None],
-            fc[:, :, :defer_window] * arrs["region_pue"][None, :, None],
-            jnp.inf), axis=(1, 2))                                # (T,)
-        if planner:
-            # green-window planner signals, batched over all epochs (the
-            # host loop computes the same reduction via
-            # ``_lookahead_signals`` so both drivers read identical f32
-            # forecast signals)
-            la_ci, gw_min = forecast.green_window_signals(
-                fc, arrs["region_pue"], pcfg.lookahead_h, pcfg.discount)
-            xs["la_ci"] = la_ci                                   # (T, R)
-            xs["la_dst"] = jnp.min(
-                jnp.where(rp_ok[None, :],
-                          la_ci * arrs["region_pue"][None, :],
-                          jnp.inf), axis=-1)                      # (T,)
-            xs["gw_min"] = gw_min                                 # (T,)
+    def build_xs(arrs):
+        """Hoisted forecast: identical per-window math as _epoch_core,
+        vmapped over epochs (the windows depend only on the constant
+        traces).  Per-trajectory — the ensemble vmaps it over lanes."""
+        traces = arrs["traces"]
+        xs = {"t": ts, "arr": arrs["arr_ids"]}
+        if use_forecast:
+            wins = jax.vmap(lambda t: jax.lax.dynamic_slice_in_dim(
+                traces, t, history_h, axis=1))(ts)
+            fc = jax.vmap(
+                lambda w: forecast.forecast_regions(w, horizon_h, 0)[0])(
+                wins)
+            xs["ci_fc_r"] = jnp.mean(fc, axis=-1)                 # (T, R)
+            # node-less regions masked (their fc * inf sentinel would be
+            # NaN when the clamped forecast is exactly 0)
+            rp_ok = jnp.isfinite(arrs["region_pue"])
+            xs["fut"] = jnp.min(jnp.where(
+                rp_ok[None, :, None],
+                fc[:, :, :defer_window]
+                * arrs["region_pue"][None, :, None],
+                jnp.inf), axis=(1, 2))                            # (T,)
+            if planner:
+                # green-window planner signals, batched over all epochs
+                # (the host loop computes the same reduction via
+                # ``_lookahead_signals`` so both drivers read identical
+                # f32 forecast signals)
+                la_ci, gw_min = forecast.green_window_signals(
+                    fc, arrs["region_pue"], pcfg.lookahead_h,
+                    pcfg.discount)
+                xs["la_ci"] = la_ci                               # (T, R)
+                xs["la_dst"] = jnp.min(
+                    jnp.where(rp_ok[None, :],
+                              la_ci * arrs["region_pue"][None, :],
+                              jnp.inf), axis=-1)                  # (T,)
+                xs["gw_min"] = gw_min                             # (T,)
+        return xs
 
-    def body(carry, xs):
+    def epoch_pre(arrs, carry, x):
+        """Epoch parts 1-3: EOL releases, evictions + migration policy,
+        and the compacted arrival-event stream — everything the placement
+        engine consumes, plus the intermediates ``epoch_post`` needs."""
+        traces, ridx = arrs["traces"], arrs["ridx"]
+        pue = arrs["pue"]
+        chips_d = arrs["chips"]
         (cap, njobs, slot_jid, slot_node, slot_end, defer_ids, mig_cost,
          overflow) = carry
-        t, arr_row = xs["t"], xs["arr"]
+        t, arr_row = x["t"], x["arr"]
         a = t + history_h
         healthy = arrs["healthy"]
         if outage is not None:
@@ -896,15 +924,16 @@ def _scan_trajectory(arrs, statics, dims):
             chips_f = s_chips.astype(jnp.float32)
             la_kw = {}
             if planner:
-                la_node = xs["la_ci"][ridx] * pue            # (N,) f32
+                la_node = x["la_ci"][ridx] * pue             # (N,) f32
                 la_kw = dict(
                     src_la=take(la_node, slot_node, stay_mask,
                                 jnp.float32(0.0)),
-                    dst_la=xs["la_dst"], gw_min=xs["gw_min"])
+                    dst_la=x["la_dst"], gw_min=x["gw_min"])
             gain = policylib.migration_gain(
                 jnp, pcfg, rate_cur=rate_cur, best_rate=br, chips=chips_f,
                 remaining=remaining, e_kwh_h=e_kwh_h,
-                ckpt=ckpt_kwh * chips_f, **la_kw)
+                ckpt=ckpt_kwh * chips_f,
+                green_gate=arrs["green_gate"], **la_kw)
             mk1 = jnp.where(stay_mask, -gain, jnp.inf)
             mk2 = jnp.where(stay_mask, slot_jid, INT_MAX)
             _, _, mig_slot = jax.lax.sort((mk1, mk2, arange_s), num_keys=2)
@@ -932,7 +961,7 @@ def _scan_trajectory(arrs, statics, dims):
                 jnp.zeros((0,), jnp.int32)
             mov_ok = jnp.zeros((0,), bool)
 
-        # ---- 3. apply release credits, then place arrivals ------------
+        # ---- 3. apply release credits, build the arrival stream -------
         strag = arrs["straggler"] + consolidate \
             * (njobs == 0).astype(jnp.float32)
         cap_start = cap.at[jnp.where(rel_valid, rel_node, N)].add(
@@ -943,31 +972,52 @@ def _scan_trajectory(arrs, statics, dims):
         narr_chips = take(chips_d, jnp.maximum(narr_jid, 0),
                           narr_jid >= 0, 0)
         dem_full = jnp.concatenate([mov_chips, narr_chips])
-        E = m_cap + n_narr
         # compact the stream: pads are exact no-ops for the engine, so the
         # loop only walks the real arrivals (order preserved) and stops at
         # their count — the dominant CPU win for the scanned core
-        ev_idx = jnp.nonzero(dem_full > 0, size=E, fill_value=E)[0]
+        ev_idx = jnp.nonzero(dem_full > 0, size=EV, fill_value=EV)[0]
         n_ev = jnp.sum((dem_full > 0).astype(jnp.int32))
-        dem = take(dem_full, ev_idx, ev_idx < E, 0)
-        tgt = jnp.full((E,), -1, jnp.int32)
+        dem = take(dem_full, ev_idx, ev_idx < EV, 0)
         if use_forecast:
-            ci_fc = xs["ci_fc_r"][ridx]
-            fut_rate = xs["fut"]
+            ci_fc = x["ci_fc_r"][ridx]
+            fut_rate = x["fut"]
         else:
             ci_fc = ci_col
             fut_rate = jnp.float32(jnp.inf)
-        out_c, cap2, n_sw = _place_epoch(
-            pue, power_kw, chips_total, strag, flops_per_j, ci_col, ci_fc,
-            cap, cap_start, healthy, dem, tgt, statics,
-            n_events=n_ev, eager_sweep=True)
-        out = jnp.full((E,), -1, jnp.int32).at[ev_idx].set(
-            out_c, mode="drop")
         cur_rate = jnp.min(jnp.where(healthy, ci_col * pue, jnp.inf))
+        return dict(cap_ctx=cap, ci_col=ci_col, ci_fc=ci_fc,
+                    healthy=healthy, strag=strag, cap_start=cap_start,
+                    dem=dem, n_ev=n_ev, ev_idx=ev_idx, fut_rate=fut_rate,
+                    cur_rate=cur_rate, t=t, njobs=njobs,
+                    slot_jid=slot_jid, slot_node=slot_node,
+                    slot_end=slot_end, mov_slot=mov_slot, mov_jid=mov_jid,
+                    narr_jid=narr_jid, narr_chips=narr_chips,
+                    completed_t=completed_t, evictions_t=evictions_t,
+                    migrations_t=migrations_t, mig_cost_t=mig_cost_t,
+                    mig_cost=mig_cost, overflow=overflow)
+
+    def epoch_post(arrs, mid, out_c, cap2, n_sw):
+        """Epoch parts 4-5: scatter the compacted placements back, record
+        mover/arrival outcomes, run the deferral queue admission, and
+        account emissions — returns the scan (carry, ys)."""
+        pue, power_kw = arrs["pue"], arrs["power_kw"]
+        chips_total = arrs["chips_total"]
+        dur_d, arrive_d = arrs["duration"], arrs["arrive"]
+        defer_d = arrs["deferrable"]
+        t = mid["t"]
+        ci_col, fut_rate = mid["ci_col"], mid["fut_rate"]
+        cur_rate = mid["cur_rate"]
+        njobs, slot_jid = mid["njobs"], mid["slot_jid"]
+        slot_node, slot_end = mid["slot_node"], mid["slot_end"]
+        mov_slot, mov_jid = mid["mov_slot"], mid["mov_jid"]
+        narr_jid, narr_chips = mid["narr_jid"], mid["narr_chips"]
+        overflow = mid["overflow"]
+        out = jnp.full((EV,), -1, jnp.int32).at[mid["ev_idx"]].set(
+            out_c, mode="drop")
 
         # ---- 4. record outcomes --------------------------------------
-        green = policylib.wants_defer(
-            fut_rate, cur_rate, jnp.float32(pcfg.defer_green_factor))
+        green = policylib.wants_defer(fut_rate, cur_rate,
+                                      arrs["green_factor"])
         placed_t = jnp.int32(0)
         dropped_t = jnp.int32(0)
         if m_cap > 0:
@@ -989,6 +1039,8 @@ def _scan_trajectory(arrs, statics, dims):
         valid = narr_jid >= 0
         jsafe = jnp.maximum(narr_jid, 0)
         if has_defer and slo:
+            slack_d, thresh_d = arrs["slack"], arrs["thresh"]
+            value_d, deadline_d = arrs["value"], arrs["deadline"]
             # SLO deferral: candidates that want to wait (green for THEIR
             # value-tightened threshold, or unplaced, inside their own
             # slack window) compete for the fixed-capacity priority queue
@@ -1004,7 +1056,7 @@ def _scan_trajectory(arrs, statics, dims):
             k3 = jnp.where(want, narr_jid, INT_MAX)
             k1s, _, _, perm = jax.lax.sort((k1, k2, k3, arange_e),
                                            num_keys=3)
-            sel_ok = jnp.isfinite(k1s[:d_cap])
+            sel_ok = jnp.isfinite(k1s[:d_cap]) & (arange_d < arrs["q_cap"])
             sel_idx = perm[:d_cap]
             defer_again = jnp.zeros((n_narr,), bool).at[
                 jnp.where(sel_ok, sel_idx, n_narr)].set(True, mode="drop")
@@ -1032,6 +1084,7 @@ def _scan_trajectory(arrs, statics, dims):
         else:
             takeback = defer_again = jnp.zeros(nnode.shape, bool)
             deferred_t = jnp.int32(0)
+            defer_ids = jnp.full((d_cap,), -1, jnp.int32)
         place_new = valid & (nnode >= 0) & ~takeback
         drop_new = valid & (nnode < 0) & ~defer_again
         # a dropped job is a deadline miss only if it ever HAD start slack
@@ -1039,7 +1092,7 @@ def _scan_trajectory(arrs, statics, dims):
         # the reactive policy — mirror that, or the counters drift at
         # defer_max_h == 0)
         if slo:
-            slackable = slack_d[jsafe] > 0
+            slackable = arrs["slack"][jsafe] > 0
         elif defer_max_h > 0:
             slackable = defer_d[jsafe]
         else:
@@ -1070,82 +1123,199 @@ def _scan_trajectory(arrs, statics, dims):
         e_t = jnp.sum(energy * pue * ci_col)
 
         carry = (cap2, njobs, slot_jid, slot_node, slot_end, defer_ids,
-                 mig_cost + mig_cost_t, overflow)
-        ys = (e_t, n_sw, completed_t, dropped_t, placed_t, deferred_t,
-              migrations_t, evictions_t, miss_t, mov_jid, ys_mov_node,
+                 mid["mig_cost"] + mid["mig_cost_t"], overflow)
+        ys = (e_t, n_sw, mid["completed_t"], dropped_t, placed_t,
+              deferred_t, mid["migrations_t"], mid["evictions_t"], miss_t,
+              mov_jid, ys_mov_node,
               jnp.where(place_new, narr_jid, -1),
               jnp.where(place_new, nnode, -1))
         return carry, ys
 
-    init = (arrs["capacity"], jnp.zeros((N,), jnp.int32),
-            jnp.full((S,), -1, jnp.int32), jnp.zeros((S,), jnp.int32),
-            jnp.zeros((S,), jnp.int32), jnp.full((d_cap,), -1, jnp.int32),
-            jnp.float32(0.0), jnp.int32(0))
-    return jax.lax.scan(body, init, xs)
+    if not ensemble:
+        xs = build_xs(arrs)
+
+        def body(carry, x):
+            mid = epoch_pre(arrs, carry, x)
+            tgt = jnp.full((EV,), -1, jnp.int32)
+            out_c, cap2, n_sw = _place_epoch(
+                arrs["pue"], arrs["power_kw"], arrs["chips_total"],
+                mid["strag"], arrs["flops_per_j"], mid["ci_col"],
+                mid["ci_fc"], mid["cap_ctx"], mid["cap_start"],
+                mid["healthy"], mid["dem"], tgt, statics,
+                n_events=mid["n_ev"], eager_sweep=True)
+            return epoch_post(arrs, mid, out_c, cap2, n_sw)
+
+        init = (arrs["capacity"], jnp.zeros((N,), jnp.int32),
+                jnp.full((S,), -1, jnp.int32), jnp.zeros((S,), jnp.int32),
+                jnp.zeros((S,), jnp.int32),
+                jnp.full((d_cap,), -1, jnp.int32),
+                jnp.float32(0.0), jnp.int32(0))
+        return jax.lax.scan(body, init, xs)
+
+    # --- batched ensemble: vmapped pre/post around the batched engine ---
+    L = arrs["capacity"].shape[0]
+    xs = jax.vmap(build_xs)(arrs)
+    xs = jax.tree_util.tree_map(lambda a: jnp.moveaxis(a, 0, 1), xs)
+    vpre = jax.vmap(epoch_pre)
+    vpost = jax.vmap(epoch_post)
+
+    def body(carry, x):
+        mid = vpre(arrs, carry, x)
+        # the same Fleet _place_epoch builds, with (L, N) leaves
+        fleet = Fleet(ci_now=mid["ci_col"].astype(jnp.float32),
+                      ci_forecast=mid["ci_fc"].astype(jnp.float32),
+                      pue=arrs["pue"], power_kw=arrs["power_kw"],
+                      capacity=mid["cap_ctx"], healthy=mid["healthy"],
+                      straggler_score=mid["strag"],
+                      flops_per_j=arrs["flops_per_j"],
+                      chips_total=arrs["chips_total"])
+        out_c, cap2, n_sw = place_lifecycle_batched(
+            fleet, mid["dem"], weights, horizon_h=1.0, engine=engine,
+            shortlist=shortlist, capacity=mid["cap_start"],
+            n_events=mid["n_ev"])
+        return vpost(arrs, mid, out_c, cap2, n_sw)
+
+    init = (arrs["capacity"], jnp.zeros((L, N), jnp.int32),
+            jnp.full((L, S), -1, jnp.int32), jnp.zeros((L, S), jnp.int32),
+            jnp.zeros((L, S), jnp.int32),
+            jnp.full((L, d_cap), -1, jnp.int32),
+            jnp.zeros((L,), jnp.float32), jnp.zeros((L,), jnp.int32))
+    carry, ys = jax.lax.scan(body, init, xs)
+    return carry, jax.tree_util.tree_map(
+        lambda a: jnp.moveaxis(a, 0, 1), ys)
 
 
-def simulate_fleet_scan(fleet0: Fleet, region_ci: np.ndarray,
-                        ridx: np.ndarray, cfg: SimConfig,
-                        jobs: Optional[JobSchedule] = None, *,
-                        pad_plan: bool = False) -> SimResult:
-    """``simulate_fleet`` with the epoch loop compiled as ONE ``lax.scan``.
+def _scan_traj_impl(arrs, statics, dims):
+    return _traj_scan(arrs, statics, dims, ensemble=False)
 
-    Same trajectory semantics as the host loop for
-    ``engine in ("shortlist", "full")`` — arrivals, EOL releases, outage
-    evictions, budget/cost-model migration, deferrable batch jobs — but the
-    T-epoch loop is a single compiled scan over a fixed-capacity job table
-    and padded event buffers (``ScanPlan``), so a year-scale trajectory
-    costs one dispatch instead of T.  The carbon-blind comparators and
-    ``record_matrices`` stay host-only.
 
-    **Equivalence contract** (asserted by ``tests/test_simulator_scan.py``
-    and the ``sim_scale`` bench): per-job placements (``node_log``,
-    ``first_node``) and all integer counters are expected to match the host
-    loop exactly; ``emissions_g`` / ``emissions_series`` /
-    ``migration_cost_g`` match to float32 accumulation tolerance (the host
-    loop accounts in float64 numpy; rtol 1e-4).  The placement decisions
-    run the identical `_epoch_core` graph, and the engine's scoring path is
-    barrier-pinned (see ``repro.core.placement``), so integer divergence
-    can only come from f32-vs-f64 near-ties in the migration-gain ordering
-    or the deferral green-hour comparison — none observed on the tested
-    streams; a mismatch is a regression, not tolerance."""
+_scan_trajectory = jax.jit(_scan_traj_impl,
+                           static_argnames=("statics", "dims"))
+
+
+@functools.partial(jax.jit, static_argnames=("statics", "dims"),
+                   donate_argnums=(0,))
+def _ensemble_trajectory(arrs, statics, dims):
+    """E stacked trajectories as ONE compiled program (see ``_traj_scan``
+    with ``ensemble=True``).  The stacked input buffers are donated (they
+    are rebuilt per call; the scan carries alias them on backends that
+    support donation)."""
+    return _traj_scan(arrs, statics, dims, ensemble=True)
+
+
+@dataclasses.dataclass
+class _ScanRun:
+    """One prepared trajectory: schedule-derived plan + static graph key,
+    ready to be built into scan inputs — alone (``simulate_fleet_scan``)
+    or stacked into an ensemble bucket whose buffer dims are the
+    member-wise maxima (``simulate_fleet_ensemble``)."""
+    fleet0: Fleet
+    region_ci: np.ndarray
+    ridx: np.ndarray
+    cfg: SimConfig
+    jobs: JobSchedule
+    pol: Policy
+    plan: ScanPlan
+    statics: tuple
+    mig_nmax: int           # widest region (rows of the mig_perm table)
+
+
+def _prepare_scan_run(fleet0: Fleet, region_ci: np.ndarray,
+                      ridx: np.ndarray, cfg: SimConfig,
+                      jobs: Optional[JobSchedule] = None,
+                      pad_plan: bool = False) -> _ScanRun:
     if cfg.engine not in ("shortlist", "full"):
         raise ValueError(
             f"scanned core supports engine='shortlist'|'full', got "
             f"{cfg.engine!r} (blind/spread comparators are host-only)")
-    N, T = fleet0.n, cfg.epochs
     jobs = jobs if jobs is not None else generate_jobs(cfg)
-    J = jobs.n
     pol = Policy.for_jobs(cfg.policy, jobs.arrive, jobs.deferrable,
                           cfg.defer_max_h, jobs.deadline, jobs.value)
     plan = _scan_plan(cfg, jobs, pol, pad=pad_plan)
+    statics = (cfg.engine, cfg.shortlist, cfg.use_kernel, cfg.weights,
+               cfg.horizon_h, cfg.history_h, cfg.use_forecast,
+               pol.defer_window(cfg.defer_max_h))
+    sizes = np.bincount(np.asarray(ridx, np.int64),
+                        minlength=region_ci.shape[0])
+    return _ScanRun(fleet0=fleet0, region_ci=np.asarray(region_ci),
+                    ridx=np.asarray(ridx), cfg=cfg, jobs=jobs, pol=pol,
+                    plan=plan, statics=statics,
+                    mig_nmax=max(int(sizes.max(initial=0)), 1))
 
-    # ``pad_plan`` also buckets the job-table width so seed ensembles with
-    # slightly different schedules reuse one compiled trajectory (padded
-    # jobs arrive past the horizon and are never touched)
-    Jp = _pad_bucket(max(J, 1)) if pad_plan else max(J, 1)
+
+def _bucket_key(run: _ScanRun) -> tuple:
+    """Everything that must match for two runs to share one compiled
+    ensemble trajectory: the placement/forecast statics, graph-shaping
+    config fields, array shapes, and the policy's canonical
+    ``graph_key``.  The remaining ``dims`` entries are pure buffer
+    sizes, maxed over the bucket by ``_shared_dims``."""
+    cfg = run.cfg
+    return (run.statics, cfg.epochs, run.fleet0.n, run.region_ci.shape,
+            cfg.migration_budget, cfg.defer_max_h, cfg.outage,
+            cfg.power_off_idle, float(cfg.consolidate),
+            float(cfg.migration_overhead_h), cfg.policy.graph_key())
+
+
+def _shared_dims(runs, pad: bool):
+    """Shared jit-static ``dims`` for a bucket of runs: every static
+    buffer size is the member-wise maximum — padding is an exact no-op
+    for each member, by the same soundness argument as ``ScanPlan``'s
+    own bounds (the SLO queue cap stays *semantic* through the traced
+    ``q_cap`` scalar, so only its buffer widens).  Returns
+    ``(dims, Jp, mig_nmax)``."""
+    cfg = runs[0].cfg
+    slots = max(r.plan.slots for r in runs)
+    dims = (cfg.epochs, slots,
+            max(r.plan.a_max for r in runs),
+            max(r.plan.d_cap for r in runs),
+            max(r.plan.rel_cap for r in runs),
+            slots if cfg.outage is not None else 0,
+            cfg.migration_budget,
+            max(int(np.max(r.jobs.chips, initial=1)) for r in runs),
+            cfg.history_h, cfg.defer_max_h, cfg.outage,
+            cfg.power_off_idle, float(cfg.consolidate),
+            float(cfg.migration_overhead_h), cfg.policy.graph_key())
+    jp = max((_pad_bucket(max(r.jobs.n, 1)) if pad else max(r.jobs.n, 1))
+             for r in runs)
+    return dims, jp, max(r.mig_nmax for r in runs)
+
+
+def _build_arrs(run: _ScanRun, dims: tuple, jp: int, mig_nmax: int):
+    """Device inputs for ONE trajectory at the bucket's shared shapes.
+
+    Padding conventions (all exact no-ops for the scan): padded jobs
+    arrive past the horizon and are never touched; padded ``arr_ids``
+    lanes carry the -1 sentinel; padded ``mig_perm`` columns carry the
+    ``N`` sentinel with +inf pue.  The per-run policy knobs that reach
+    the graph as data (``q_cap``/``green_factor``/``green_gate``) ride
+    along as traced scalars."""
+    fleet0, cfg, jobs, plan = run.fleet0, run.cfg, run.jobs, run.plan
+    region_ci, ridx = run.region_ci, run.ridx
+    N, T, J = fleet0.n, cfg.epochs, jobs.n
+    a_max = dims[2]
 
     def jconst(x, fill, dtype):
-        out = np.full(Jp, fill, dtype)
+        out = np.full(jp, fill, dtype)
         out[:J] = np.asarray(x, dtype)[:J]
         return jnp.asarray(out)
 
     region_pue = _region_pue(region_ci.shape[0], ridx, fleet0.pue)
-    # static per-region pue-ascending node order for the migration policy's
-    # best-feasible-rate computation (rate = pue · ci_region, so within a
-    # region the rate order never changes)
+    # static per-region pue-ascending node order for the migration
+    # policy's best-feasible-rate computation (rate = pue · ci_region, so
+    # within a region the rate order never changes)
     R = region_ci.shape[0]
     ridx_np = np.asarray(ridx, np.int64)
     pue_np = np.asarray(fleet0.pue, np.float32)
     sizes = np.bincount(ridx_np, minlength=R)
-    n_max = max(int(sizes.max(initial=0)), 1)
-    mig_perm = np.full((R, n_max), N, np.int32)       # N = padding sentinel
-    mig_pue = np.full((R, n_max), np.inf, np.float32)
+    mig_perm = np.full((R, mig_nmax), N, np.int32)    # N = padding sentinel
+    mig_pue = np.full((R, mig_nmax), np.inf, np.float32)
     order = np.lexsort((pue_np, ridx_np))
     col = np.arange(order.size) \
         - np.concatenate([[0], np.cumsum(sizes)])[ridx_np[order]]
     mig_perm[ridx_np[order], col] = order
     mig_pue[ridx_np[order], col] = pue_np[order]
+    arr_ids = np.full((T, a_max), -1, np.int32)
+    arr_ids[:, :plan.a_max] = plan.arr_ids
     arrs = dict(
         mig_perm=jnp.asarray(mig_perm), mig_pue=jnp.asarray(mig_pue),
         traces=jnp.asarray(region_ci, jnp.float32),
@@ -1160,26 +1330,25 @@ def simulate_fleet_scan(fleet0: Fleet, region_ci: np.ndarray,
         duration=jconst(jobs.duration, 1, np.int32),
         arrive=jconst(jobs.arrive, T + 1, np.int32),
         deferrable=jconst(jobs.deferrable, False, bool),
-        arr_ids=jnp.asarray(plan.arr_ids),
+        arr_ids=jnp.asarray(arr_ids),
+        q_cap=jnp.int32(plan.d_cap),
+        green_factor=jnp.float32(cfg.policy.defer_green_factor),
+        green_gate=jnp.float32(cfg.policy.green_gate),
     )
-    if pol.slo:
+    if run.pol.slo:
         arrs.update(
-            slack=jconst(pol.slack, 0, np.int32),
-            thresh=jconst(pol.thresh, 1.0, np.float32),
-            value=jconst(pol.value, np.inf, np.float32),
-            deadline=jconst(pol.deadline_ep, 0, np.int32))
-    statics = (cfg.engine, cfg.shortlist, cfg.use_kernel, cfg.weights,
-               cfg.horizon_h, cfg.history_h, cfg.use_forecast,
-               pol.defer_window(cfg.defer_max_h))
-    dims = (T, plan.slots, plan.a_max, plan.d_cap, plan.rel_cap,
-            plan.m_evict, cfg.migration_budget, int(np.max(jobs.chips,
-                                                           initial=1)),
-            cfg.history_h, cfg.defer_max_h, cfg.outage, cfg.power_off_idle,
-            float(cfg.consolidate), float(cfg.migration_overhead_h),
-            cfg.policy.graph_key())
-    carry, ys = jax.block_until_ready(_scan_trajectory(arrs, statics, dims))
-    (cap_f, njobs_f, slot_jid_f, _, _, defer_f, mig_cost_f,
-     overflow_f) = carry
+            slack=jconst(run.pol.slack, 0, np.int32),
+            thresh=jconst(run.pol.thresh, 1.0, np.float32),
+            value=jconst(run.pol.value, np.inf, np.float32),
+            deadline=jconst(run.pol.deadline_ep, 0, np.int32))
+    return arrs
+
+
+def _scan_result(run: _ScanRun, carry, ys) -> SimResult:
+    """Unpack one trajectory's (carry, ys) into a ``SimResult`` on the
+    host (numpy inputs; the ensemble slices its member lane first)."""
+    jobs, plan, T, J = run.jobs, run.plan, run.cfg.epochs, run.jobs.n
+    defer_f, mig_cost_f, overflow_f = carry[5], carry[6], carry[7]
     if int(overflow_f) != 0:
         raise RuntimeError(
             f"scanned simulator overflowed its static buffers "
@@ -1236,6 +1405,130 @@ def simulate_fleet_scan(fleet0: Fleet, region_ci: np.ndarray,
         defer_delay_h=delay_h, start_epoch=start_epoch)
 
 
+def simulate_fleet_scan(fleet0: Fleet, region_ci: np.ndarray,
+                        ridx: np.ndarray, cfg: SimConfig,
+                        jobs: Optional[JobSchedule] = None, *,
+                        pad_plan: bool = False) -> SimResult:
+    """``simulate_fleet`` with the epoch loop compiled as ONE ``lax.scan``.
+
+    Same trajectory semantics as the host loop for
+    ``engine in ("shortlist", "full")`` — arrivals, EOL releases, outage
+    evictions, budget/cost-model migration, deferrable batch jobs — but the
+    T-epoch loop is a single compiled scan over a fixed-capacity job table
+    and padded event buffers (``ScanPlan``), so a year-scale trajectory
+    costs one dispatch instead of T.  The carbon-blind comparators and
+    ``record_matrices`` stay host-only.
+
+    **Equivalence contract** (asserted by ``tests/test_simulator_scan.py``
+    and the ``sim_scale`` bench): per-job placements (``node_log``,
+    ``first_node``) and all integer counters are expected to match the host
+    loop exactly; ``emissions_g`` / ``emissions_series`` /
+    ``migration_cost_g`` match to float32 accumulation tolerance (the host
+    loop accounts in float64 numpy; rtol 1e-4).  The placement decisions
+    run the identical `_epoch_core` graph, and the engine's scoring path is
+    barrier-pinned (see ``repro.core.placement``), so integer divergence
+    can only come from f32-vs-f64 near-ties in the migration-gain ordering
+    or the deferral green-hour comparison — none observed on the tested
+    streams; a mismatch is a regression, not tolerance.
+
+    ``pad_plan`` buckets every static buffer (and the job-table width) to
+    ``_pad_bucket`` sizes — behavior-neutral, but seed ensembles with
+    slightly different schedules then share one compiled trajectory."""
+    run = _prepare_scan_run(fleet0, region_ci, ridx, cfg, jobs, pad_plan)
+    dims, jp, nmax = _shared_dims([run], pad_plan)
+    arrs = _build_arrs(run, dims, jp, nmax)
+    carry, ys = jax.block_until_ready(
+        _scan_trajectory(arrs, run.statics, dims))
+    return _scan_result(run, [np.asarray(c) for c in carry],
+                        [np.asarray(y) for y in ys])
+
+
+def simulate_fleet_ensemble(runs, *, pad_plan: bool = True,
+                            shard: bool = False) -> list:
+    """Run an ensemble of trajectories as ONE compiled, ONE dispatched
+    batched-``lax.scan`` program per graph bucket.
+
+    ``runs`` is a sequence of ``(fleet0, region_ci, ridx, cfg)`` or
+    ``(fleet0, region_ci, ridx, cfg, jobs)`` tuples — the exact argument
+    tuples ``simulate_fleet_scan`` takes; the result list matches input
+    order and is **bit-identical per trajectory** to calling
+    ``simulate_fleet_scan`` on each member (placements and every integer
+    counter exact, emissions to the scanned core's own f32 tolerance —
+    asserted by ``tests/test_simulator_ensemble.py``).
+
+    Members are grouped by graph key (``_bucket_key``: placement statics,
+    epochs, fleet/trace shapes, graph-shaping config fields, and
+    ``PolicyConfig.graph_key`` — so a threshold/value/queue-cap grid over
+    one seed set is a single bucket); within a bucket every per-trajectory
+    input is stacked on a leading E axis and buffer dims are the
+    member-wise maxima (``pad_plan`` bucketing keeps those maxima shared
+    across seeds).  The bucket then runs as one batched scan —
+    ``vmap``-ed loop-free epoch halves around the hand-batched placement
+    engine (``_traj_scan(ensemble=True)``) — so a whole grid costs one
+    compile and one dispatch, its per-epoch element ops carry the E
+    axis, and sweeps/sorts batch over lanes.  On wide-vector or
+    multi-device hardware that axis is the throughput lever; on a single
+    XLA:CPU device it measures dispatch-equivalent (see EXPERIMENTS.md
+    §Ensemble for the numbers and the memory ceiling in E).
+
+    ``shard=True`` additionally lays the E axis out across the available
+    devices (largest divisor of E <= device count) via ``NamedSharding``,
+    so the same compiled program runs data-parallel over the ensemble on
+    multi-device CPU/TPU; on a single device it is a no-op."""
+    preps = []
+    for spec in runs:
+        jobs = spec[4] if len(spec) > 4 else None
+        if spec[3].use_kernel:
+            raise NotImplementedError(
+                "simulate_fleet_ensemble batches the jnp scoring path "
+                "only; run simulate_fleet_scan per member for the Pallas "
+                "kernel sweep (use_kernel=True)")
+        preps.append(_prepare_scan_run(spec[0], spec[1], spec[2], spec[3],
+                                       jobs, pad_plan))
+    buckets: Dict[tuple, list] = {}
+    for i, p in enumerate(preps):
+        buckets.setdefault(_bucket_key(p), []).append(i)
+    results: list = [None] * len(preps)
+    for idxs in buckets.values():
+        members = [preps[i] for i in idxs]
+        dims, jp, nmax = _shared_dims(members, pad_plan)
+        built = [_build_arrs(m, dims, jp, nmax) for m in members]
+        stacked = {k: jnp.stack([b[k] for b in built]) for k in built[0]}
+        del built
+        if shard:
+            stacked = _shard_over_e(stacked)
+        with warnings.catch_warnings():
+            # input donation is best-effort: only the lanes that alias a
+            # scan carry are consumed, the rest warn — expected, not a bug
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            carry, ys = jax.block_until_ready(
+                _ensemble_trajectory(stacked, members[0].statics, dims))
+        carry = [np.asarray(c) for c in carry]
+        ys = [np.asarray(y) for y in ys]
+        for lane, i in enumerate(idxs):
+            results[i] = _scan_result(preps[i],
+                                      [c[lane] for c in carry],
+                                      [y[lane] for y in ys])
+    return results
+
+
+def _shard_over_e(stacked):
+    """Lay the leading ensemble axis across devices (largest divisor of E
+    <= the device count); ``jit`` then compiles the vmapped trajectory as
+    an SPMD program partitioned over E — every input is batched on E, so
+    the partition is communication-free."""
+    devs = jax.devices()
+    E = next(iter(stacked.values())).shape[0]
+    nd = max((d for d in range(1, len(devs) + 1) if E % d == 0),
+             default=1)
+    if nd <= 1:
+        return stacked
+    mesh = jax.sharding.Mesh(np.array(devs[:nd]), ("e",))
+    sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("e"))
+    return {k: jax.device_put(v, sh) for k, v in stacked.items()}
+
+
 # ---------------------------------------------------------------------------
 # synthetic lifecycle fleet (traces + node arrays)
 # ---------------------------------------------------------------------------
@@ -1285,23 +1578,29 @@ def synthetic_lifecycle_fleet(n: int, cfg: SimConfig,
 
 def sweep_policies(cfg: SimConfig, policies, *, n: int = 1024,
                    seeds=(0,), chips_per_node: int = 256,
-                   region: Optional[int] = None) -> list:
+                   region: Optional[int] = None, ensemble: bool = True,
+                   shard: bool = False) -> list:
     """Run a seed ensemble per policy through the scanned core and return
     flat records for the carbon-vs-latency Pareto study.
 
     ``policies`` maps name -> ``PolicyConfig`` (dict or (name, cfg)
     pairs); each (policy, seed) pair re-derives the fleet, traces and job
-    schedule from ``dataclasses.replace(cfg, seed=seed, policy=pcfg)`` and
-    runs ``simulate_fleet_scan`` with ``pad_plan=True`` — buffer shapes
-    are bucketed, so the grid shares compiled trajectories and a full
-    threshold x value sweep at N=4096/T=8760 costs seconds per point, not
-    a recompile per point (threshold/value knobs live in traced per-job
-    columns).  Latency is reported two ways: ``avg_start_delay_h`` (mean
-    placement delay over started jobs) and ``miss_rate`` (deadline misses
-    over slack-carrying jobs inside the horizon)."""
+    schedule from ``dataclasses.replace(cfg, seed=seed, policy=pcfg)``.
+    With ``ensemble=True`` (default) the whole (policy x seed) grid runs
+    through ``simulate_fleet_ensemble``: grid points whose policies share
+    a ``graph_key`` become lanes of ONE batched scan — one compile, one
+    dispatch per bucket — instead of one scan dispatch per point
+    (threshold/value/queue-cap knobs live in traced per-job columns and
+    per-run scalars).  ``ensemble=False`` keeps the sequential
+    per-point ``simulate_fleet_scan`` path (the timing baseline of the
+    ``ensemble`` bench block; results are bit-identical either way).
+    Both use ``pad_plan=True`` bucketing so shapes are shared.  Latency
+    is reported two ways: ``avg_start_delay_h`` (mean placement delay
+    over started jobs) and ``miss_rate`` (deadline misses over
+    slack-carrying jobs inside the horizon)."""
     items = policies.items() if isinstance(policies, dict) else policies
-    records = []
     fleet_cache: Dict[int, tuple] = {}   # fleet/traces depend on seed only
+    runs, metas = [], []
     for name, pcfg in items:
         for seed in seeds:
             c = dataclasses.replace(cfg, seed=int(seed), policy=pcfg)
@@ -1310,27 +1609,34 @@ def sweep_policies(cfg: SimConfig, policies, *, n: int = 1024,
                     n, c, chips_per_node=chips_per_node, region=region)
             fleet, traces, ridx = fleet_cache[int(seed)]
             jobs = generate_jobs(c)
-            r = simulate_fleet_scan(fleet, traces, ridx, c, jobs=jobs,
-                                    pad_plan=True)
-            pol = Policy.for_jobs(c.policy, jobs.arrive, jobs.deferrable,
-                                  c.defer_max_h, jobs.deadline, jobs.value)
-            in_h = np.asarray(jobs.arrive) < c.epochs
-            slo_jobs = int(((pol.slack > 0) & in_h).sum())
-            started = int((r.start_epoch >= 0).sum())
-            records.append({
-                "policy": name, "seed": int(seed), "n": n,
-                "epochs": c.epochs, "jobs": int(jobs.n),
-                "emissions_g": float(r.emissions_g),
-                "migration_cost_g": float(r.migration_cost_g),
-                "migrations": int(r.migrations),
-                "completed": int(r.jobs_completed),
-                "dropped": int(r.jobs_dropped),
-                "deferred": int(r.jobs_deferred),
-                "deadline_misses": int(r.deadline_misses),
-                "defer_delay_h": int(r.defer_delay_h),
-                "avg_start_delay_h": r.defer_delay_h / max(started, 1),
-                "miss_rate": r.deadline_misses / max(slo_jobs, 1),
-            })
+            runs.append((fleet, traces, ridx, c, jobs))
+            metas.append((name, int(seed), c, jobs))
+    if ensemble:
+        rs = simulate_fleet_ensemble(runs, pad_plan=True, shard=shard)
+    else:
+        rs = [simulate_fleet_scan(f, t, ri, c, jobs=j, pad_plan=True)
+              for f, t, ri, c, j in runs]
+    records = []
+    for (name, seed, c, jobs), r in zip(metas, rs):
+        pol = Policy.for_jobs(c.policy, jobs.arrive, jobs.deferrable,
+                              c.defer_max_h, jobs.deadline, jobs.value)
+        in_h = np.asarray(jobs.arrive) < c.epochs
+        slo_jobs = int(((pol.slack > 0) & in_h).sum())
+        started = int((r.start_epoch >= 0).sum())
+        records.append({
+            "policy": name, "seed": seed, "n": n,
+            "epochs": c.epochs, "jobs": int(jobs.n),
+            "emissions_g": float(r.emissions_g),
+            "migration_cost_g": float(r.migration_cost_g),
+            "migrations": int(r.migrations),
+            "completed": int(r.jobs_completed),
+            "dropped": int(r.jobs_dropped),
+            "deferred": int(r.jobs_deferred),
+            "deadline_misses": int(r.deadline_misses),
+            "defer_delay_h": int(r.defer_delay_h),
+            "avg_start_delay_h": r.defer_delay_h / max(started, 1),
+            "miss_rate": r.deadline_misses / max(slo_jobs, 1),
+        })
     return records
 
 
