@@ -15,6 +15,9 @@ Usage (one call per artifact kind):
     python benchmarks/check_regression.py --kind ensemble \
         --current BENCH_policy.json \
         --baseline benchmarks/baselines/BENCH_policy_smoke.json
+    python benchmarks/check_regression.py --kind robustness \
+        --current BENCH_robustness.json \
+        --baseline benchmarks/baselines/BENCH_robustness_smoke.json
 
 Gates (exit 1 on any):
 - **parity breaks**: any parity flag false in the current artifact
@@ -37,6 +40,12 @@ Gates (exit 1 on any):
   runs report the speedup informationally (see EXPERIMENTS.md §Ensemble
   for why the floor needs hardware lanes) and gate parity plus the
   usual runtime-ratio check on the ensemble warm seconds;
+- **robustness regressions** (``--kind robustness``): zero-rate fault
+  streams no longer bitwise no-ops, job conservation broken on a faulted
+  lane, host-vs-scan parity lost under the chaos probe, the degraded
+  operator's dropout curve non-monotone, or persistence fallback no
+  longer beating naive stale-trust at 100% dropout — all
+  machine-independent flags, gated at smoke scale too;
 - **runtime regressions**: any matched runtime metric slower than baseline
   by more than ``--runtime-tol`` (default 1.5x).  Baselines carry numbers
   from the machine class that produced them; regenerate them (rerun the
@@ -220,6 +229,40 @@ def check_policy(base: dict, cur: dict, t: Table, tol: float) -> None:
                       c.get("slo_miss_rate_max"), slack=0.02)
 
 
+def check_robustness(base: dict, cur: dict, t: Table, tol: float) -> None:
+    """Fault-layer gates (BENCH_robustness.json, see repro.core.faults):
+    the zero-rate FaultConfig must stay a bitwise no-op vs the clean
+    oracle, job conservation must hold on every faulted lane,
+    host-vs-scan parity must survive active fault streams (the chaos
+    probe), the degraded operator's CO2-penalty curve must stay monotone
+    in dropout rate, and at full dropout the persistence-fallback
+    operator must keep beating the naive trust-stale-forever one.  All
+    five are machine-independent flags recorded by the bench, so they
+    gate at smoke scale too; the penalty delta + runtime ratio compare
+    against the committed baseline."""
+    for key, b, c in _match(base, cur):
+        tag = f"n={key[0]}/t={key[1]}"
+        t.check_flag(f"{tag} zero-fault bitwise vs clean",
+                     c.get("zero_fault_bitwise"))
+        t.check_flag(f"{tag} job conservation under faults",
+                     c.get("conservation"))
+        t.check_flag(f"{tag} chaos host-vs-scan parity",
+                     c.get("parity_probe", {}).get("parity"))
+        t.check_flag(f"{tag} degraded curve monotone",
+                     c.get("monotone_degraded"))
+        t.check_flag(f"{tag} degraded beats naive at full dropout",
+                     c.get("degraded_beats_naive_at_full_dropout"))
+
+        def pen(doc, mode):
+            cv = doc.get("curve") or [{}]
+            return cv[-1].get(mode, {}).get("co2_penalty_pct")
+
+        t.check_delta(f"{tag} degraded penalty at max rate pct",
+                      pen(b, "degraded"), pen(c, "degraded"), slack=0.5)
+        t.check_ratio(f"{tag} ensemble s", b.get("ens_s"),
+                      c.get("ens_s"), tol)
+
+
 def check_ensemble(base: dict, cur: dict, t: Table, tol: float) -> None:
     """Batched-ensemble gates (the ``ensemble`` block bench_policy
     records): per-trajectory parity with the sequential scan is a hard
@@ -263,7 +306,8 @@ def check_ensemble(base: dict, cur: dict, t: Table, tol: float) -> None:
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--kind",
-                    choices=("sim", "placement", "policy", "ensemble"),
+                    choices=("sim", "placement", "policy", "ensemble",
+                             "robustness"),
                     required=True)
     ap.add_argument("--current", required=True)
     ap.add_argument("--baseline", required=True)
@@ -286,6 +330,8 @@ def main() -> int:
             check_policy(base, cur, t, args.runtime_tol)
         elif args.kind == "ensemble":
             check_ensemble(base, cur, t, args.runtime_tol)
+        elif args.kind == "robustness":
+            check_robustness(base, cur, t, args.runtime_tol)
         else:
             check_sim(base, cur, t, args.runtime_tol)
         if not t.rows:

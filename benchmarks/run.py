@@ -12,6 +12,9 @@ Framework benches:
   sim_scale            — rolling lifecycle fleet simulator (BENCH_sim.json)
   policy               — planner-vs-reactive CO2 + SLO Pareto frontier
                          (BENCH_policy.json)
+  robustness           — signal-fault degradation curve: degraded vs
+                         naive vs clean oracle + chaos parity probe
+                         (BENCH_robustness.json)
   train_step_smoke     — reduced-arch train step wall time (CPU)
   decode_step_smoke    — reduced-arch decode step wall time (CPU)
   roofline_report      — aggregates results/dryrun/*.json (see §Roofline)
@@ -611,6 +614,220 @@ def bench_policy():
                 f"{ensemble_block['devices']} devices")
 
 
+def bench_robustness():
+    """Signal-fault degradation study (see repro.core.faults): CO2
+    penalty and SLO misses vs CI-feed dropout rate, comparing three
+    operators against the clean oracle (faults=None) on the same jobs,
+    fleet and seeds:
+
+    - NAIVE trusts stale hold-last signals forever (stale_cap_h=0) —
+      at full dropout its view freezes to one snapshot, losing the
+      diurnal structure migration gains track;
+    - DEGRADED caps staleness at 6 h then falls back to
+      persistence-of-day replay, which keeps both the regional ordering
+      and the diurnal cycle — the gated graceful-degradation mode;
+    - SAFE additionally freezes migrations once every node-bearing
+      region is > 12 h stale.  Reported, not gated: in this fleet the
+      regional CI spread persists, so giving up spatial arbitrage costs
+      more than acting on the persistence reconstruction ever loses —
+      the measured price of the conservative option (the safe-mode
+      machinery itself is exercised and parity-checked here and in
+      tests/test_faults.py).
+
+    The whole (mode x rate x seed) grid runs through
+    ``simulate_fleet_ensemble``: fault rates/caps are traced data, not
+    graph structure (``fault_graph_key``), so every faulted lane shares
+    ONE compiled batched scan and the clean lanes a second.  Dropout
+    masks nest across rates by construction (common random numbers:
+    ``u >= p``), so the curve is monotone unless degradation handling
+    itself regresses.  A separate chaos probe (flaps + migration
+    failures + telemetry noise + forecast outages on top of dropout)
+    re-checks host-vs-scan bit-parity under active fault streams.
+
+    Env knobs: ROBUST_NS / ROBUST_EPOCHS / ROBUST_SEEDS / ROBUST_RATES
+    size the study (defaults 1024 / 720 / 3 seeds / 5 rates; CI smoke
+    shrinks all four).  Emits BENCH_robustness.json; exits nonzero —
+    at ANY scale — on a zero-fault digest drifting from the clean
+    oracle, a chaos parity break, or a job-conservation violation, and
+    at acceptance scale additionally on a non-monotone degraded curve
+    or the degraded operator failing to beat naive at 100% dropout."""
+    import hashlib
+    from repro.core.faults import FaultConfig
+    from repro.core.simulator import (SimConfig, generate_jobs,
+                                      simulate_fleet,
+                                      simulate_fleet_ensemble,
+                                      simulate_fleet_scan,
+                                      synthetic_lifecycle_fleet)
+    n = int(os.environ.get("ROBUST_NS", "512"))
+    epochs = int(os.environ.get("ROBUST_EPOCHS", "360"))
+    seeds = tuple(int(x) for x in
+                  os.environ.get("ROBUST_SEEDS", "1,2,3").split(","))
+    rates = tuple(float(x) for x in
+                  os.environ.get("ROBUST_RATES",
+                                 "0,0.25,0.5,0.75,1.0").split(","))
+    gate_scale = n >= 512 and epochs >= 360
+
+    MODES = {"naive": FaultConfig(),
+             "degraded": FaultConfig(stale_cap_h=6),
+             "safe": FaultConfig(stale_cap_h=6, safe_stale_h=12)}
+
+    def faults(rate, mode):
+        return dataclasses.replace(MODES[mode], ci_dropout=rate)
+
+    def digest(r):
+        return hashlib.sha256(np.concatenate(
+            [r.node_log, r.first_node]).tobytes()).hexdigest()[:16]
+
+    runs, metas = [], []
+    fleet_cache = {}
+    for seed in seeds:
+        # workload and migration budget scale WITH the fleet so signal
+        # quality stays the binding constraint: at fixed arrivals a big
+        # fleet is mostly idle, consolidation dominates and stale
+        # rankings accidentally help (stable ranking = stable packing).
+        # n/8 arrivals/h at 12h mean duration keeps ~80-90% chip
+        # utilization at chips_per_node=64; n=96 reproduces the
+        # historical smoke config exactly (rate 12, budget 2).
+        cfg = SimConfig(epochs=epochs, seed=seed, arrival_rate=n / 8.0,
+                        mean_duration_h=12.0,
+                        migration_budget=max(2, n // 64),
+                        deferrable_frac=0.1, shortlist=64)
+        fleet_cache[seed] = synthetic_lifecycle_fleet(n, cfg,
+                                                      chips_per_node=64)
+        fleet, traces, ridx = fleet_cache[seed]
+        jobs = generate_jobs(cfg)
+        runs.append((fleet, traces, ridx, cfg, jobs))
+        metas.append(("clean", 0.0, seed))
+        for rate in rates:
+            for mode in MODES:
+                c = dataclasses.replace(cfg, faults=faults(rate, mode))
+                runs.append((fleet, traces, ridx, c, jobs))
+                metas.append((mode, rate, seed))
+    t0 = time.perf_counter()
+    results = simulate_fleet_ensemble(runs)
+    ens_s = time.perf_counter() - t0
+    by = {m: r for m, r in zip(metas, results)}
+
+    # --- invariants (in-horizon arrivals are identical across the lanes
+    # of one seed: same JobSchedule object) -----------------------------
+    conserved = True
+    for seed in seeds:
+        jobs = [x for m, x in zip(metas, runs) if m == ("clean", 0.0,
+                                                        seed)][0][4]
+        in_h = int((np.asarray(jobs.arrive) < epochs).sum())
+        for (mode, rate, s), r in by.items():
+            if s != seed:
+                continue
+            conserved &= (r.jobs_completed + r.jobs_dropped
+                          + r.jobs_active_end == in_h)
+    zero_fault_ok = all(
+        digest(by[("clean", 0.0, s)]) == digest(by[(m, 0.0, s)])
+        for s in seeds for m in MODES) if 0.0 in rates else None
+
+    def agg(mode, rate, field):
+        return float(np.mean([getattr(by[(mode, rate, s)], field)
+                              for s in seeds]))
+
+    clean_e = float(np.mean([by[("clean", 0.0, s)].emissions_g
+                             for s in seeds]))
+    curve = []
+    for rate in rates:
+        pt = {"rate": rate}
+        for mode in MODES:
+            e = agg(mode, rate, "emissions_g")
+            pt[mode] = {
+                "emissions_g": e,
+                "co2_penalty_pct": 100.0 * (e / clean_e - 1.0),
+                "deadline_misses": agg(mode, rate, "deadline_misses"),
+                "migrations": agg(mode, rate, "migrations"),
+                "migration_cost_g": agg(mode, rate, "migration_cost_g"),
+                "safe_epochs": agg(mode, rate, "safe_epochs"),
+            }
+        curve.append(pt)
+        row(f"robustness_p{rate:g}", 0.0,
+            f"naive={pt['naive']['co2_penalty_pct']:+.3f}%;"
+            f"degraded={pt['degraded']['co2_penalty_pct']:+.3f}%;"
+            f"safe={pt['safe']['co2_penalty_pct']:+.3f}%;"
+            f"safe_epochs={pt['safe']['safe_epochs']:.0f}")
+    pens = [pt["degraded"]["co2_penalty_pct"] for pt in curve]
+    # CRN nesting makes the curve monotone up to packing noise: below
+    # ~75% dropout the penalty sits in a ~0.1pp noise floor (a frozen
+    # ranking that is merely *stale* still orders regions correctly most
+    # epochs, and bin-packing outcomes flip on single-slot ties), so the
+    # slack must cover lane-to-lane packing jitter, not just f32
+    # summation error.  The real signal — the rise into p=1.0 — is ~1pp.
+    monotone = all(b >= a - 0.15 for a, b in zip(pens, pens[1:]))
+    full = curve[-1]
+    beats = bool(full["degraded"]["co2_penalty_pct"]
+                 < full["naive"]["co2_penalty_pct"]) \
+        if full["rate"] >= 1.0 else None
+    row(f"robustness_ensemble_n{n}_t{epochs}",
+        ens_s * 1e6 / max(len(runs), 1),
+        f"lanes={len(runs)};zero_fault_bitwise={zero_fault_ok};"
+        f"monotone={monotone};degraded_beats_naive={beats}")
+
+    # --- chaos parity probe (host loop vs scanned core, faults active) --
+    pcfg = SimConfig(epochs=36, seed=3, arrival_rate=6.0,
+                     mean_duration_h=12.0, migration_budget=2,
+                     deferrable_frac=0.3, shortlist=16, history_h=48,
+                     horizon_h=8, outage=[(0, 6, 4), (1, 18, 4)],
+                     faults=FaultConfig(ci_dropout=0.6, stale_cap_h=2,
+                                        safe_stale_h=4, telem_sigma=0.1,
+                                        fc_outage=((5, 4),),
+                                        fc_dropout=0.2, mig_fail=0.4,
+                                        flap_rate=0.03, quarantine_h=2))
+    pf, ptr, pri = synthetic_lifecycle_fleet(96, pcfg, chips_per_node=64)
+    pjobs = generate_jobs(pcfg)
+    h = simulate_fleet(pf, ptr, pri, pcfg, jobs=pjobs)
+    s = simulate_fleet_scan(pf, ptr, pri, pcfg, jobs=pjobs)
+    probe_ok, rel = _scan_vs_host_parity(h, s)
+    probe_ok &= all(getattr(h, f) == getattr(s, f) for f in
+                    ("migrations_failed", "jobs_active_end",
+                     "safe_epochs"))
+    row("robustness_chaos_parity", 0.0,
+        f"parity={probe_ok};emissions_rel_err={rel:.2e};"
+        f"migf={h.migrations_failed};safe={h.safe_epochs}")
+
+    entry = {"n": n, "epochs": epochs, "gate_scale": gate_scale,
+             "rates": list(rates), "seeds": list(seeds),
+             "lanes": len(runs), "ens_s": ens_s,
+             "clean_emissions_g": clean_e,
+             "curve": curve,
+             "zero_fault_bitwise": zero_fault_ok,
+             "conservation": bool(conserved),
+             "monotone_degraded": bool(monotone),
+             "degraded_beats_naive_at_full_dropout": beats,
+             "parity_probe": {"parity": bool(probe_ok),
+                              "emissions_rel_err": rel,
+                              "migrations_failed": int(
+                                  h.migrations_failed),
+                              "safe_epochs": int(h.safe_epochs)}}
+    write_artifact("BENCH_robustness.json", {"configs": [entry]},
+                   {"n": n, "epochs": epochs, "seeds": list(seeds),
+                    "rates": list(rates)})
+    if zero_fault_ok is False:
+        raise SystemExit(
+            "zero-rate FaultConfig no longer reproduces the clean "
+            "oracle bitwise — the no-op contract of the fault layer "
+            "broke")
+    if not conserved:
+        raise SystemExit(
+            "job conservation violated under faults: completed + "
+            "dropped + active_end != in-horizon arrivals")
+    if not probe_ok:
+        raise SystemExit(
+            f"host-vs-scan parity broke under active fault streams "
+            f"(emissions_rel_err={rel:.2e})")
+    if gate_scale and not monotone:
+        raise SystemExit(
+            f"degradation curve non-monotone in dropout: {pens}")
+    if gate_scale and beats is False:
+        raise SystemExit(
+            f"degraded operator did not beat naive at 100% dropout: "
+            f"degraded {full['degraded']['co2_penalty_pct']:+.3f}% vs "
+            f"naive {full['naive']['co2_penalty_pct']:+.3f}%")
+
+
 def bench_train_step_smoke():
     from repro.configs import ARCHS
     from repro.models.model import ModelFlags, build_model
@@ -678,6 +895,7 @@ BENCHES = {
     "placement_scale": bench_placement_scale,
     "sim_scale": bench_sim_scale,
     "policy": bench_policy,
+    "robustness": bench_robustness,
     "train_step_smoke": bench_train_step_smoke,
     "decode_step_smoke": bench_decode_step_smoke,
     "roofline_report": bench_roofline_report,

@@ -5,6 +5,7 @@
 # the fleet state the training framework feeds (fleet).
 from repro.core.carbon import carbon_footprint, emissions_g, job_energy_kwh, cp_ratio  # noqa: F401
 from repro.core.forecast import fit_forecast, forecast_regions, forecast_skill  # noqa: F401
+from repro.core.faults import FaultConfig, FaultPlan, plan_faults  # noqa: F401
 from repro.core.ranking import RankWeights, maiz_ranking, rank_nodes  # noqa: F401
 from repro.core.fleet import Fleet, synthetic_fleet  # noqa: F401
 from repro.core.placement import (PlacementResult, place_jobs_full_rerank,  # noqa: F401

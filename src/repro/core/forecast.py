@@ -75,6 +75,23 @@ forecast_regions = jax.vmap(fit_forecast, in_axes=(0, None, None),
                             out_axes=(0, 0))
 
 
+@functools.partial(jax.jit, static_argnames=("horizon",))
+def persistence_forecast(history: jax.Array, horizon: int) -> jax.Array:
+    """Persistence-of-day fallback: cycle the last ``min(T, 24)`` observed
+    hours across the horizon.  This is the graceful-degradation forecast
+    the simulator substitutes when the forecast service is out (see
+    ``faults.FaultConfig.fc_outage``/``fc_dropout``) — it needs only the
+    same observed window ``fit_forecast`` reads, no fitted coefficients,
+    and it is exactly the skill baseline ``forecast_skill`` scores
+    against."""
+    L = min(history.shape[0], 24)
+    return jnp.tile(history[-L:], (horizon + L - 1) // L)[:horizon]
+
+
+persistence_regions = jax.vmap(persistence_forecast, in_axes=(0, None),
+                               out_axes=0)
+
+
 def green_window_signals(fc: jax.Array, region_pue: jax.Array,
                          lookahead_h: int, discount: float = 0.9
                          ) -> Tuple[jax.Array, jax.Array]:
@@ -114,8 +131,6 @@ def forecast_skill(history: jax.Array, test: jax.Array) -> jax.Array:
     """MAE ratio vs 24h-persistence baseline (<1 means we beat persistence)."""
     fc, _ = fit_forecast(history, test.shape[0])
     mae = jnp.mean(jnp.abs(fc - test))
-    L = min(history.shape[0], 24)
-    persist = jnp.tile(history[-L:], (test.shape[0] + L - 1) // L)[
-        :test.shape[0]]
+    persist = persistence_forecast(history, test.shape[0])
     mae_p = jnp.mean(jnp.abs(persist - test))
     return mae / jnp.maximum(mae_p, 1e-9)

@@ -62,6 +62,7 @@ import numpy as np
 __all__ = [
     "PolicyConfig", "Policy", "REACTIVE", "green_window", "slo_deferral",
     "migration_gain", "wants_defer", "slo_queue_order", "sound_queue_bound",
+    "degraded_gain", "degraded_future",
 ]
 
 
@@ -183,6 +184,26 @@ def migration_gain(xp, pcfg: PolicyConfig, *, rate_cur, best_rate, chips,
     gg = pcfg.green_gate if green_gate is None else green_gate
     gate = best_rate <= gg * gw_min
     return xp.where(gate, gain, -xp.inf)
+
+
+def degraded_gain(xp, gain, safe):
+    """Safe-mode migration freeze: when the fleet's CI signal is stale
+    beyond ``faults.FaultConfig.safe_stale_h`` (the traced per-epoch
+    ``safe`` flag), every migration gain collapses to ``-inf`` — moving on
+    garbage telemetry risks paying real checkpoint carbon for an imagined
+    win, so the degraded operator holds still until signal returns.
+    Written once over ``xp`` so the host loop (numpy) and the scanned
+    core (jnp) freeze identically."""
+    return xp.where(safe, -xp.inf, gain)
+
+
+def degraded_future(xp, fut_rate, safe):
+    """Safe-mode green-window freeze: an ``inf`` future rate makes
+    ``wants_defer`` false for every job (and the SLO queue drains on
+    deadlines only) — deferral stops chasing forecast dips the stale
+    signal can no longer see.  Same single-expression contract as
+    ``degraded_gain``."""
+    return xp.where(safe, xp.inf, fut_rate)
 
 
 def wants_defer(fut_rate, cur_rate, thresh):

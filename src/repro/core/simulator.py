@@ -69,6 +69,8 @@ import numpy as np
 from repro.core import forecast, telemetry
 from repro.core import policy as policylib
 from repro.core.carbon import job_energy_kwh
+from repro.core.faults import (FaultConfig, FaultPlan, fault_graph_key,
+                               plan_faults)
 from repro.core.fleet import IDLE_POWER_FRAC, Fleet
 from repro.core.placement import (place_lifecycle_batched,
                                   place_lifecycle_full_rerank,
@@ -94,7 +96,9 @@ class SimConfig:
     arrival_rate: float = 12.0      # mean arrivals / epoch
     diurnal: bool = True            # business-hours modulation
     flash_crowd: Optional[Tuple[int, int, float]] = None  # (t0, len, mult)
-    outage: Optional[Tuple[int, int, int]] = None  # (region, t0, len)
+    # one (region, t0, len) window, or a list/tuple of such windows
+    # (normalized by _outage_windows; the single-tuple form stays accepted)
+    outage: Optional[Tuple[int, int, int]] = None
     mean_duration_h: float = 12.0
     chips_lo: int = 8
     chips_hi: int = 64
@@ -102,6 +106,15 @@ class SimConfig:
     defer_max_h: int = 6
     # --- policy subsystem (migration + deferral, see repro.core.policy) ---
     policy: PolicyConfig = PolicyConfig()
+    # --- signal faults + graceful degradation (see repro.core.faults) ---
+    # None = perfect oracles (the historical behavior, bit-identical to
+    # the pre-fault golden trajectories); a FaultConfig degrades every
+    # signal the policies read while emission accounting stays on ground
+    # truth.  Only fault_graph_key(faults) shapes the compiled scan.
+    faults: Optional[FaultConfig] = None
+    # manual override for the scanned core's job-table width (0 = the
+    # sound ScanPlan bound); surfaced by the slot-overflow error message
+    scan_slots: int = 0
     # --- migration ---
     migration_budget: int = 0       # max policy migrations / epoch
     migration_overhead_h: float = 0.05   # checkpoint+restore wall clock
@@ -119,6 +132,19 @@ class SimConfig:
     @property
     def use_forecast(self) -> bool:
         return self.weights.w2 != 0.0
+
+
+def _outage_windows(outage) -> Tuple[Tuple[int, int, int], ...]:
+    """Normalize ``SimConfig.outage`` to a tuple of (region, t0, len)
+    windows: ``None`` -> ``()``, the historical single tuple -> a 1-tuple,
+    and any sequence of windows passes through.  Both drivers and the
+    scanned core's static shapes consume only this canonical form."""
+    if outage is None:
+        return ()
+    if len(outage) == 3 and all(
+            isinstance(v, (int, np.integer)) for v in outage):
+        return (tuple(int(v) for v in outage),)
+    return tuple(tuple(int(v) for v in w) for w in outage)
 
 
 @dataclasses.dataclass
@@ -196,6 +222,9 @@ class SimResult:
     emissions_series: np.ndarray    # (T,) gCO2 per epoch
     deadline_misses: int = 0        # slack>0 jobs that never started in time
     defer_delay_h: int = 0          # sum of (start - arrive) over placements
+    migrations_failed: int = 0      # actuation failures (budget consumed)
+    jobs_active_end: int = 0        # still running when the horizon ends
+    safe_epochs: int = 0            # epochs spent with policy frozen
     start_epoch: Optional[np.ndarray] = None  # (J,) first-placement epoch
     util: Optional[np.ndarray] = None   # (N, T) when record_matrices
     on: Optional[np.ndarray] = None
@@ -240,23 +269,35 @@ def _place_epoch(pue, power_kw, chips_total, straggler, flops_per_j,
 
 def _epoch_core(traces, ridx, pue, power_kw, chips_total, straggler,
                 flops_per_j, region_pue, t, cap, healthy, demands, nodes,
-                statics):
+                fc_ok, statics):
     """One simulator epoch on-device: slice the CI column, refresh the FCFP
     forecast, build the Fleet and run the lifecycle placement engine.
     ``straggler`` already carries the per-epoch consolidation bonus.
+
+    ``traces`` is whatever CI the *policies* may read — the degraded
+    observed trace under a ``FaultConfig``, ground truth otherwise (the
+    callers keep emission accounting on ground truth either way).  When
+    the statics' ``fc_fallback`` flag is set, the traced ``fc_ok`` scalar
+    selects between the fitted forecast and the persistence-of-day
+    fallback (``forecast.persistence_regions``) — a forecast-service
+    outage is per-epoch data, not graph structure.
 
     The scanned core (``simulate_fleet_scan``) runs the same pieces —
     ``_place_epoch`` plus the identical CI/forecast expressions — inside
     ``lax.scan``, with the forecast batched over epochs up front (bitwise
     equal: it only depends on the static traces)."""
     (engine, shortlist, use_kernel, weights, horizon_h, history_h,
-     use_forecast, defer_window) = statics
+     use_forecast, defer_window, fc_fallback) = statics
     ci_now_r = jax.lax.dynamic_slice_in_dim(traces, t, 1, axis=1)[:, 0]
     ci_now = ci_now_r[ridx]
     if use_forecast:
         window = jax.lax.dynamic_slice_in_dim(
             traces, t - history_h, history_h, axis=1)
         fc, _ = forecast.forecast_regions(window, horizon_h, 0)  # (R, H)
+        if fc_fallback:
+            fc = jnp.where(fc_ok,
+                           fc, forecast.persistence_regions(window,
+                                                            horizon_h))
         ci_fc = jnp.mean(fc, axis=-1)[ridx]
         # greenest achievable CFP rate inside the deferral window, for the
         # deferrable-batch policy (min over regions and near-term hours);
@@ -282,9 +323,10 @@ _epoch_step = jax.jit(_epoch_core, static_argnames=("statics",))
 
 @functools.partial(jax.jit, static_argnames=("epochs", "history_h",
                                              "horizon_h", "lookahead_h",
-                                             "discount"))
-def _lookahead_signals(traces, region_pue, epochs, history_h, horizon_h,
-                       lookahead_h, discount):
+                                             "discount", "fc_fallback"))
+def _lookahead_signals(traces, region_pue, fc_ok, epochs, history_h,
+                       horizon_h, lookahead_h, discount,
+                       fc_fallback=False):
     """Green-window planner signals for ALL epochs in one batched call:
     the identical windowed-forecast graph the scanned core hoists as scan
     ``xs`` (it only depends on the static traces), reduced by
@@ -299,6 +341,10 @@ def _lookahead_signals(traces, region_pue, epochs, history_h, horizon_h,
         traces, t, history_h, axis=1))(ts)
     fc = jax.vmap(
         lambda w: forecast.forecast_regions(w, horizon_h, 0)[0])(wins)
+    if fc_fallback:
+        fcp = jax.vmap(
+            lambda w: forecast.persistence_regions(w, horizon_h))(wins)
+        fc = jnp.where(fc_ok[:, None, None], fc, fcp)
     la_ci, gw_min = forecast.green_window_signals(
         fc, region_pue, lookahead_h, discount)
     la_dst = jnp.min(jnp.where(jnp.isfinite(region_pue)[None, :],
@@ -357,8 +403,22 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
     planner = (pol.lookahead and cfg.migration_budget > 0 and not blind
                and cfg.use_forecast)
     green_factor = float(cfg.policy.defer_green_factor)
+    outs = _outage_windows(cfg.outage)
 
-    traces = jnp.asarray(region_ci, jnp.float32)
+    # fault streams: every policy decision reads the degraded OBSERVED
+    # trace (including the jitted epoch step below); emission + migration
+    # cost accounting stays on ground truth
+    fplan: Optional[FaultPlan] = None
+    if cfg.faults is not None:
+        fplan = plan_faults(cfg.faults, np.asarray(region_ci, np.float64),
+                            np.asarray(ridx), T, cfg.history_h,
+                            cfg.migration_budget, N, cfg.seed)
+    obs_ci = region_ci if fplan is None else fplan.obs_traces
+    has_flaps = fplan is not None and fplan.has_flaps
+    mig_block: Dict[int, Tuple[int, int]] = {}  # job -> (until, n_fails)
+    mig_failed = 0
+
+    traces = jnp.asarray(obs_ci, jnp.float32)
     ridx_d = jnp.asarray(ridx, jnp.int32)
     region_pue_d = jnp.asarray(
         _region_pue(region_ci.shape[0], ridx, fleet0.pue), jnp.float32)
@@ -395,25 +455,33 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
     util_m = np.zeros((N, T)) if record_matrices else None
     on_m = np.zeros((N, T)) if record_matrices else None
 
+    fc_fallback = (fplan is not None and cfg.use_forecast and not blind)
     statics = (cfg.engine, cfg.shortlist, cfg.use_kernel, cfg.weights,
                cfg.horizon_h, cfg.history_h,
                cfg.use_forecast and not blind,
-               pol.defer_window(cfg.defer_max_h))
+               pol.defer_window(cfg.defer_max_h), fc_fallback)
     overhead_s = cfg.migration_overhead_h * 3600.0
     if planner:
+        fc_ok_d = jnp.asarray(fplan.fc_ok) if fplan is not None \
+            else jnp.ones(T, bool)
         la_ci_all, la_dst_all, gw_min_all = [
             np.asarray(x) for x in _lookahead_signals(
-                traces, region_pue_d, T, cfg.history_h, cfg.horizon_h,
-                cfg.policy.lookahead_h, cfg.policy.discount)]
+                traces, region_pue_d, fc_ok_d, T, cfg.history_h,
+                cfg.horizon_h, cfg.policy.lookahead_h, cfg.policy.discount,
+                fc_fallback)]
 
     for t in range(T):
         a = cfg.history_h + t
-        ci_col = region_ci[:, a][ridx]                       # (N,) f64
+        ci_col = region_ci[:, a][ridx]      # (N,) f64 TRUE (accounting)
+        ci_obs_col = obs_ci[:, a][ridx]     # (N,) f64 observed (policy)
+        fc_ok_t = bool(fplan.fc_ok[t]) if fplan is not None else True
+        safe_t = bool(fplan.safe[t]) if fplan is not None else False
         healthy = healthy0.copy()
-        if cfg.outage is not None:
-            reg, t0, length = cfg.outage
+        for reg, t0, length in outs:
             if t0 <= t < t0 + length:
                 healthy &= (ridx != reg)
+        if has_flaps:
+            healthy &= fplan.eligible[t]
 
         # ---- 1. end-of-life releases --------------------------------
         rel_jobs = [j for j in ends.pop(t, []) if jstate[j] == _ACTIVE]
@@ -425,13 +493,15 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
 
         # ---- 2. forced evictions + migration policy -----------------
         active = np.where(jstate == _ACTIVE)[0]
-        evict = active[~healthy[jnode[active]]] if cfg.outage else \
-            np.empty(0, np.int64)
+        evict = active[~healthy[jnode[active]]] if (outs or has_flaps) \
+            else np.empty(0, np.int64)
         mig: list = []
         if cfg.migration_budget > 0 and not blind and active.size:
             stay = active[healthy[jnode[active]]]
             free = cap_h.copy()
-            rate = np.where(healthy, pue_h * ci_col, np.inf)
+            # policy rates read the OBSERVED trace; the accounting below
+            # charges the move at the true CI regardless
+            rate = np.where(healthy, pue_h * ci_obs_col, np.inf)
             # best achievable CFP rate per distinct chip demand, O(C·N)
             best_rate: Dict[int, float] = {}
             for c in np.unique(jobs.chips[stay]):
@@ -456,9 +526,31 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
                 e_kwh_h=float(e_kwh_h),
                 ckpt=np.asarray(job_energy_kwh(overhead_s, 1, chips_arr)),
                 **la_kw)
+            if mig_block and stay.size:
+                # retry-with-backoff: a job whose last actuation failed is
+                # frozen out of the candidate sort until its backoff ends
+                blocked = np.array([mig_block.get(int(j), (0, 0))[0] > t
+                                    for j in stay])
+                gain = np.where(blocked, -np.inf, gain)
+            if safe_t:
+                gain = policylib.degraded_gain(np, gain, safe_t)
             order = np.argsort(-gain, kind="stable")
-            mig = [int(stay[i]) for i in order[:cfg.migration_budget]
-                   if gain[i] > 0.0]
+            # attempt rank k draws fault stream mig_fail[t, k]: a failed
+            # hypervisor command consumes its budget slot (the job stays
+            # put, nothing charged) and doubles the job's retry backoff
+            for k, i in enumerate(order[:cfg.migration_budget]):
+                if not gain[i] > 0.0:
+                    continue
+                j = int(stay[i])
+                if fplan is not None and k < fplan.mig_fail.shape[1] \
+                        and fplan.mig_fail[t, k]:
+                    nf = mig_block.get(j, (0, 0))[1] + 1
+                    mig_block[j] = (t + cfg.faults.mig_backoff_h
+                                    * (1 << min(nf - 1, 10)), nf)
+                    mig_failed += 1
+                    continue
+                mig.append(j)
+                mig_block.pop(j, None)
         migrations += len(mig)
         evictions += evict.size
         movers = list(evict) + mig
@@ -504,11 +596,15 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
                 fleet0.chips_total, strag,
                 fleet0.flops_per_j, region_pue_d, jnp.int32(a), cap,
                 jnp.asarray(healthy), jnp.asarray(dem), jnp.asarray(tgt),
-                statics)
+                jnp.asarray(fc_ok_t), statics)
             out = np.asarray(out)
             cap_h = np.asarray(cap, np.int64)
             sweeps += int(n_sw)
             cur_rate, fut_rate = float(cur_rate), float(fut_rate)
+            # safe mode: a stale fleet stops chasing green hours it can no
+            # longer see — the inf future rate turns every wants_defer off
+            fut_rate = float(policylib.degraded_future(np, fut_rate,
+                                                       safe_t))
 
         # ---- 4. record outcomes -------------------------------------
         # deferrable jobs whose green hour is coming release their slot
@@ -595,7 +691,7 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
                     fleet0.chips_total, strag,
                     fleet0.flops_per_j, region_pue_d, jnp.int32(a), cap,
                     jnp.asarray(healthy), jnp.asarray(d2), jnp.asarray(n2),
-                    statics)
+                    jnp.asarray(fc_ok_t), statics)
                 cap_h = np.asarray(cap, np.int64)
 
         # ---- 5. emission accounting ---------------------------------
@@ -628,8 +724,11 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
                      jobs_deferred=deferred_n, migrations=migrations,
                      evictions=evictions, node_log=jnode, first_node=jfirst,
                      emissions_series=series, deadline_misses=misses,
-                     defer_delay_h=delay_h, start_epoch=jstart,
-                     util=util_m, on=on_m)
+                     defer_delay_h=delay_h, migrations_failed=mig_failed,
+                     jobs_active_end=int((jstate == _ACTIVE).sum()),
+                     safe_epochs=int(fplan.safe.sum())
+                     if fplan is not None else 0,
+                     start_epoch=jstart, util=util_m, on=on_m)
 
 
 def _place_blind(dem: np.ndarray, tgt: np.ndarray, cap: np.ndarray,
@@ -680,8 +779,8 @@ class ScanPlan:
     - ``a_max`` / ``rel_cap`` / ``d_cap``: max new arrivals, end-of-life
       releases, and deferred-arrival carry in any epoch (sliding-window
       counts over the schedule);
-    - ``m_evict``: eviction buffer — ``slots`` when an outage is configured
-      (everything active could sit in the outaged region), else 0.
+    - ``m_evict``: eviction buffer — ``slots`` when outage windows or node
+      flapping are configured (everything active could be evicted), else 0.
 
     The scanned core still counts any bound violation in
     ``overflow`` (belt and braces: a nonzero value is an internal error,
@@ -723,7 +822,8 @@ def _scan_plan(cfg: SimConfig, jobs: JobSchedule, pol: Policy,
     diff = np.zeros(hi, np.int64)
     np.add.at(diff, arrive[in_h], 1)
     np.add.at(diff, (arrive + slack + dur)[in_h], -1)
-    slots = max(int(np.cumsum(diff).max(initial=0)), a_max, 1)
+    slots = max(int(np.cumsum(diff).max(initial=0)), a_max, 1,
+                int(cfg.scan_slots))
     # EOL release epoch lies in [arrive + dur, arrive + dur + slack]
     rdiff = np.zeros(hi, np.int64)
     np.add.at(rdiff, np.minimum((arrive + dur)[in_h], hi - 1), 1)
@@ -742,7 +842,10 @@ def _scan_plan(cfg: SimConfig, jobs: JobSchedule, pol: Policy,
         rel_cap = _pad_bucket(rel_cap)
         if d_cap > 0 and not pol.slo:   # the SLO queue cap is semantic
             d_cap = _pad_bucket(d_cap)
-    m_evict = slots if cfg.outage is not None else 0
+    # flapping nodes force evictions exactly like outage windows do, so
+    # either fault source sizes the eviction buffer
+    flaps = cfg.faults is not None and cfg.faults.flap_rate > 0.0
+    m_evict = slots if (_outage_windows(cfg.outage) or flaps) else 0
     return ScanPlan(slots=slots, a_max=a_max, d_cap=d_cap, rel_cap=rel_cap,
                     m_evict=m_evict, arr_ids=arr_ids)
 
@@ -778,12 +881,14 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
       a searchsorted replaces a fleet-wide scatter-min."""
     (T, S, a_max, d_cap, rel_cap, m_evict, budget, chips_max, history_h,
      defer_max_h, outage, power_off_idle, consolidate, overhead_h,
-     pcfg) = dims
+     pcfg, fkey) = dims
+    faulty, fault_mig, fault_flap = fkey     # faults.fault_graph_key
     N = arrs["capacity"].shape[-1]
     engine, shortlist = statics[0], statics[1]
     weights = statics[3]
     horizon_h, use_forecast = statics[4], statics[6]
     defer_window = statics[7]
+    fc_fallback = statics[8]
     budget = min(budget, S)     # can't migrate more jobs than can be active
     slo = pcfg.deferral == "slo"
     planner = pcfg.migration == "lookahead" and use_forecast and budget > 0
@@ -819,21 +924,36 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
         traces).  Per-trajectory — the ensemble vmaps it over lanes."""
         traces = arrs["traces"]
         xs = {"t": ts, "arr": arrs["arr_ids"]}
+        if faulty:
+            xs["safe"] = arrs["f_safe"]
+            if fault_flap:
+                xs["elig"] = arrs["f_elig"]
+            if fault_mig and budget > 0:
+                xs["mig_fail"] = arrs["f_mig_fail"][:, :budget]
         if use_forecast:
             wins = jax.vmap(lambda t: jax.lax.dynamic_slice_in_dim(
                 traces, t, history_h, axis=1))(ts)
             fc = jax.vmap(
                 lambda w: forecast.forecast_regions(w, horizon_h, 0)[0])(
                 wins)
+            if fc_fallback:
+                # forecast-service outage epochs fall back to the
+                # persistence-of-day forecast over the same observed
+                # window (identical select as _epoch_core, batched)
+                fcp = jax.vmap(lambda w: forecast.persistence_regions(
+                    w, horizon_h))(wins)
+                fc = jnp.where(arrs["f_fc_ok"][:, None, None], fc, fcp)
             xs["ci_fc_r"] = jnp.mean(fc, axis=-1)                 # (T, R)
             # node-less regions masked (their fc * inf sentinel would be
             # NaN when the clamped forecast is exactly 0)
             rp_ok = jnp.isfinite(arrs["region_pue"])
-            xs["fut"] = jnp.min(jnp.where(
+            fut = jnp.min(jnp.where(
                 rp_ok[None, :, None],
                 fc[:, :, :defer_window]
                 * arrs["region_pue"][None, :, None],
                 jnp.inf), axis=(1, 2))                            # (T,)
+            xs["fut"] = policylib.degraded_future(
+                jnp, fut, arrs["f_safe"]) if faulty else fut
             if planner:
                 # green-window planner signals, batched over all epochs
                 # (the host loop computes the same reduction via
@@ -858,16 +978,27 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
         pue = arrs["pue"]
         chips_d = arrs["chips"]
         (cap, njobs, slot_jid, slot_node, slot_end, defer_ids, mig_cost,
-         overflow) = carry
+         overflow) = carry[:8]
+        if fault_mig:
+            mig_until, mig_nfail = carry[8], carry[9]
+        else:
+            mig_until = mig_nfail = None
         t, arr_row = x["t"], x["arr"]
         a = t + history_h
         healthy = arrs["healthy"]
-        if outage is not None:
-            reg, t0, length = outage
+        for reg, t0, length in outage:
             healthy = healthy & ~((t >= t0) & (t < t0 + length)
                                   & (ridx == reg))
+        if fault_flap:
+            healthy = healthy & x["elig"]
         ci_col_r = jax.lax.dynamic_slice_in_dim(traces, a, 1, axis=1)[:, 0]
         ci_col = ci_col_r[ridx]
+        # decisions read the observed column (ci_col); accounting and
+        # migration-cost charging read ground truth (the same tensor when
+        # no faults are configured — the graph is unchanged)
+        ci_true = jax.lax.dynamic_slice_in_dim(
+            arrs["traces_true"], a, 1, axis=1)[:, 0][ridx] if faulty \
+            else ci_col
         occupied = slot_jid >= 0
 
         # ---- 1. end-of-life releases (vector mask; on a dirty engine
@@ -892,6 +1023,7 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
         seg_slot, seg_ok = [], []
         evictions_t = jnp.int32(0)
         migrations_t = jnp.int32(0)
+        failed_t = jnp.int32(0)
         mig_cost_t = jnp.float32(0.0)
         if m_evict > 0:
             evict_mask = occupied2 & ~node_healthy
@@ -934,18 +1066,45 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
                 remaining=remaining, e_kwh_h=e_kwh_h,
                 ckpt=ckpt_kwh * chips_f,
                 green_gate=arrs["green_gate"], **la_kw)
+            if fault_mig:
+                # retry-with-backoff: slots whose last actuation failed
+                # are frozen out of the candidate sort until the backoff
+                # ends (same -inf freeze as the host's mig_block dict)
+                gain = jnp.where(stay_mask & (mig_until > t),
+                                 -jnp.inf, gain)
+            if faulty:
+                gain = policylib.degraded_gain(jnp, gain, x["safe"])
             mk1 = jnp.where(stay_mask, -gain, jnp.inf)
             mk2 = jnp.where(stay_mask, slot_jid, INT_MAX)
             _, _, mig_slot = jax.lax.sort((mk1, mk2, arange_s), num_keys=2)
             mig_slot = mig_slot[:budget]
             mig_ok = stay_mask[mig_slot] & (gain[mig_slot] > 0.0)
+            if fault_mig:
+                # attempt rank k draws fault stream mig_fail[t, k]: the
+                # failed command consumes its budget slot (the job stays
+                # put, nothing charged) and doubles the retry backoff;
+                # a later success resets the slot's backoff state
+                fail = mig_ok & x["mig_fail"]
+                mig_ok = mig_ok & ~x["mig_fail"]
+                failed_t = jnp.sum(fail.astype(jnp.int32))
+                nf1 = take(mig_nfail, mig_slot, fail, 0) + 1
+                until = t + arrs["mig_backoff"] * (
+                    jnp.int32(1) << jnp.minimum(nf1 - 1, 10))
+                mig_until = mig_until.at[
+                    jnp.where(fail, mig_slot, S)].set(until, mode="drop")
+                mig_nfail = mig_nfail.at[
+                    jnp.where(fail, mig_slot, S)].set(nf1, mode="drop")
+                mig_until = mig_until.at[
+                    jnp.where(mig_ok, mig_slot, S)].set(0, mode="drop")
+                mig_nfail = mig_nfail.at[
+                    jnp.where(mig_ok, mig_slot, S)].set(0, mode="drop")
             migrations_t = jnp.sum(mig_ok.astype(jnp.int32))
             mnode = jnp.clip(slot_node[mig_slot], 0, N - 1)
             mchip = chips_d[jnp.maximum(slot_jid[mig_slot], 0)]
             mig_cost_t = jnp.sum(jnp.where(
                 mig_ok,
                 ckpt_kwh * mchip.astype(jnp.float32)
-                * pue[mnode] * ci_col[mnode], 0.0))
+                * pue[mnode] * ci_true[mnode], 0.0))
             seg_slot.append(mig_slot)
             seg_ok.append(mig_ok)
         if m_cap > 0:
@@ -985,16 +1144,20 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
             ci_fc = ci_col
             fut_rate = jnp.float32(jnp.inf)
         cur_rate = jnp.min(jnp.where(healthy, ci_col * pue, jnp.inf))
-        return dict(cap_ctx=cap, ci_col=ci_col, ci_fc=ci_fc,
-                    healthy=healthy, strag=strag, cap_start=cap_start,
-                    dem=dem, n_ev=n_ev, ev_idx=ev_idx, fut_rate=fut_rate,
-                    cur_rate=cur_rate, t=t, njobs=njobs,
-                    slot_jid=slot_jid, slot_node=slot_node,
-                    slot_end=slot_end, mov_slot=mov_slot, mov_jid=mov_jid,
-                    narr_jid=narr_jid, narr_chips=narr_chips,
-                    completed_t=completed_t, evictions_t=evictions_t,
-                    migrations_t=migrations_t, mig_cost_t=mig_cost_t,
-                    mig_cost=mig_cost, overflow=overflow)
+        mid = dict(cap_ctx=cap, ci_col=ci_col, ci_fc=ci_fc,
+                   healthy=healthy, strag=strag, cap_start=cap_start,
+                   dem=dem, n_ev=n_ev, ev_idx=ev_idx, fut_rate=fut_rate,
+                   cur_rate=cur_rate, t=t, njobs=njobs,
+                   slot_jid=slot_jid, slot_node=slot_node,
+                   slot_end=slot_end, mov_slot=mov_slot, mov_jid=mov_jid,
+                   narr_jid=narr_jid, narr_chips=narr_chips,
+                   completed_t=completed_t, evictions_t=evictions_t,
+                   migrations_t=migrations_t, mig_cost_t=mig_cost_t,
+                   mig_cost=mig_cost, overflow=overflow,
+                   ci_true=ci_true, failed_t=failed_t)
+        if fault_mig:
+            mid.update(mig_until=mig_until, mig_nfail=mig_nfail)
+        return mid
 
     def epoch_post(arrs, mid, out_c, cap2, n_sw):
         """Epoch parts 4-5: scatter the compacted placements back, record
@@ -1115,20 +1278,28 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
         dropped_t += jnp.sum(drop_new.astype(jnp.int32))
 
         # ---- 5. emission accounting ----------------------------------
+        # always at the TRUE carbon intensity — faults degrade what the
+        # policies see, not what the grid actually emitted
         on = (njobs > 0) if power_off_idle else jnp.ones((N,), bool)
         occ = 1.0 - cap2.astype(jnp.float32) \
             / jnp.maximum(chips_total.astype(jnp.float32), 1.0)
         energy = power_kw * (IDLE_POWER_FRAC
                              + (1.0 - IDLE_POWER_FRAC) * occ) * on
-        e_t = jnp.sum(energy * pue * ci_col)
+        e_t = jnp.sum(energy * pue * mid["ci_true"])
 
         carry = (cap2, njobs, slot_jid, slot_node, slot_end, defer_ids,
                  mid["mig_cost"] + mid["mig_cost_t"], overflow)
+        if fault_mig:
+            # a reused slot belongs to a fresh job with no failure history
+            carry = carry + (
+                mid["mig_until"].at[tgt_slot].set(0, mode="drop"),
+                mid["mig_nfail"].at[tgt_slot].set(0, mode="drop"))
         ys = (e_t, n_sw, mid["completed_t"], dropped_t, placed_t,
               deferred_t, mid["migrations_t"], mid["evictions_t"], miss_t,
               mov_jid, ys_mov_node,
               jnp.where(place_new, narr_jid, -1),
-              jnp.where(place_new, nnode, -1))
+              jnp.where(place_new, nnode, -1),
+              overflow, mid["failed_t"])
         return carry, ys
 
     if not ensemble:
@@ -1150,6 +1321,9 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
                 jnp.zeros((S,), jnp.int32),
                 jnp.full((d_cap,), -1, jnp.int32),
                 jnp.float32(0.0), jnp.int32(0))
+        if fault_mig:
+            init = init + (jnp.zeros((S,), jnp.int32),
+                           jnp.zeros((S,), jnp.int32))
         return jax.lax.scan(body, init, xs)
 
     # --- batched ensemble: vmapped pre/post around the batched engine ---
@@ -1180,6 +1354,9 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
             jnp.zeros((L, S), jnp.int32),
             jnp.full((L, d_cap), -1, jnp.int32),
             jnp.zeros((L,), jnp.float32), jnp.zeros((L,), jnp.int32))
+    if fault_mig:
+        init = init + (jnp.zeros((L, S), jnp.int32),
+                       jnp.zeros((L, S), jnp.int32))
     carry, ys = jax.lax.scan(body, init, xs)
     return carry, jax.tree_util.tree_map(
         lambda a: jnp.moveaxis(a, 0, 1), ys)
@@ -1218,6 +1395,7 @@ class _ScanRun:
     plan: ScanPlan
     statics: tuple
     mig_nmax: int           # widest region (rows of the mig_perm table)
+    fplan: Optional[FaultPlan] = None   # materialized fault streams
 
 
 def _prepare_scan_run(fleet0: Fleet, region_ci: np.ndarray,
@@ -1232,15 +1410,22 @@ def _prepare_scan_run(fleet0: Fleet, region_ci: np.ndarray,
     pol = Policy.for_jobs(cfg.policy, jobs.arrive, jobs.deferrable,
                           cfg.defer_max_h, jobs.deadline, jobs.value)
     plan = _scan_plan(cfg, jobs, pol, pad=pad_plan)
+    fc_fallback = cfg.faults is not None and cfg.use_forecast
     statics = (cfg.engine, cfg.shortlist, cfg.use_kernel, cfg.weights,
                cfg.horizon_h, cfg.history_h, cfg.use_forecast,
-               pol.defer_window(cfg.defer_max_h))
+               pol.defer_window(cfg.defer_max_h), fc_fallback)
+    fplan = None
+    if cfg.faults is not None:
+        fplan = plan_faults(cfg.faults, np.asarray(region_ci, np.float64),
+                            np.asarray(ridx), cfg.epochs, cfg.history_h,
+                            cfg.migration_budget, fleet0.n, cfg.seed)
     sizes = np.bincount(np.asarray(ridx, np.int64),
                         minlength=region_ci.shape[0])
     return _ScanRun(fleet0=fleet0, region_ci=np.asarray(region_ci),
                     ridx=np.asarray(ridx), cfg=cfg, jobs=jobs, pol=pol,
                     plan=plan, statics=statics,
-                    mig_nmax=max(int(sizes.max(initial=0)), 1))
+                    mig_nmax=max(int(sizes.max(initial=0)), 1),
+                    fplan=fplan)
 
 
 def _bucket_key(run: _ScanRun) -> tuple:
@@ -1251,9 +1436,11 @@ def _bucket_key(run: _ScanRun) -> tuple:
     sizes, maxed over the bucket by ``_shared_dims``."""
     cfg = run.cfg
     return (run.statics, cfg.epochs, run.fleet0.n, run.region_ci.shape,
-            cfg.migration_budget, cfg.defer_max_h, cfg.outage,
+            cfg.migration_budget, cfg.defer_max_h,
+            _outage_windows(cfg.outage),
             cfg.power_off_idle, float(cfg.consolidate),
-            float(cfg.migration_overhead_h), cfg.policy.graph_key())
+            float(cfg.migration_overhead_h), cfg.policy.graph_key(),
+            fault_graph_key(cfg.faults))
 
 
 def _shared_dims(runs, pad: bool):
@@ -1265,16 +1452,18 @@ def _shared_dims(runs, pad: bool):
     ``(dims, Jp, mig_nmax)``."""
     cfg = runs[0].cfg
     slots = max(r.plan.slots for r in runs)
+    outs = _outage_windows(cfg.outage)
+    fkey = fault_graph_key(cfg.faults)
     dims = (cfg.epochs, slots,
             max(r.plan.a_max for r in runs),
             max(r.plan.d_cap for r in runs),
             max(r.plan.rel_cap for r in runs),
-            slots if cfg.outage is not None else 0,
+            slots if (outs or fkey[2]) else 0,
             cfg.migration_budget,
             max(int(np.max(r.jobs.chips, initial=1)) for r in runs),
-            cfg.history_h, cfg.defer_max_h, cfg.outage,
+            cfg.history_h, cfg.defer_max_h, outs,
             cfg.power_off_idle, float(cfg.consolidate),
-            float(cfg.migration_overhead_h), cfg.policy.graph_key())
+            float(cfg.migration_overhead_h), cfg.policy.graph_key(), fkey)
     jp = max((_pad_bucket(max(r.jobs.n, 1)) if pad else max(r.jobs.n, 1))
              for r in runs)
     return dims, jp, max(r.mig_nmax for r in runs)
@@ -1335,6 +1524,22 @@ def _build_arrs(run: _ScanRun, dims: tuple, jp: int, mig_nmax: int):
         green_factor=jnp.float32(cfg.policy.defer_green_factor),
         green_gate=jnp.float32(cfg.policy.green_gate),
     )
+    if run.fplan is not None:
+        fp = run.fplan
+        # decisions read the degraded observed trace; the true trace rides
+        # along for emission/migration-cost accounting.  All fault streams
+        # are DATA — only fault_graph_key decides which lanes exist, so a
+        # whole dropout/staleness grid shares one compiled trajectory.
+        arrs.update(
+            traces=jnp.asarray(fp.obs_traces, jnp.float32),
+            traces_true=jnp.asarray(region_ci, jnp.float32),
+            f_fc_ok=jnp.asarray(fp.fc_ok),
+            f_safe=jnp.asarray(fp.safe),
+            mig_backoff=jnp.int32(cfg.faults.mig_backoff_h))
+        if cfg.faults.mig_fail > 0.0:
+            arrs["f_mig_fail"] = jnp.asarray(fp.mig_fail)
+        if cfg.faults.flap_rate > 0.0:
+            arrs["f_elig"] = jnp.asarray(fp.eligible)
     if run.pol.slo:
         arrs.update(
             slack=jconst(run.pol.slack, 0, np.int32),
@@ -1349,16 +1554,20 @@ def _scan_result(run: _ScanRun, carry, ys) -> SimResult:
     host (numpy inputs; the ensemble slices its member lane first)."""
     jobs, plan, T, J = run.jobs, run.plan, run.cfg.epochs, run.jobs.n
     defer_f, mig_cost_f, overflow_f = carry[5], carry[6], carry[7]
-    if int(overflow_f) != 0:
-        raise RuntimeError(
-            f"scanned simulator overflowed its static buffers "
-            f"({int(overflow_f)} events beyond ScanPlan(slots={plan.slots},"
-            f" a_max={plan.a_max}, d_cap={plan.d_cap},"
-            f" rel_cap={plan.rel_cap}, m_evict={plan.m_evict})) — bound"
-            f" violated; please report")
     (e_t, n_sw, completed_t, dropped_t, placed_t, deferred_t, mig_t,
-     evi_t, miss_t, mov_jid, mov_node, new_jid, new_node) = [np.asarray(y)
-                                                             for y in ys]
+     evi_t, miss_t, mov_jid, mov_node, new_jid, new_node, ov_t,
+     failed_t) = [np.asarray(y) for y in ys]
+    if int(overflow_f) != 0:
+        bad = int(np.argmax(ov_t > 0))   # first epoch whose cumulative
+        raise RuntimeError(              # overflow count is nonzero
+            f"scanned simulator overflowed its static job-slot capacity "
+            f"S={plan.slots} at epoch {bad}: {int(overflow_f)} event(s) "
+            f"beyond ScanPlan(slots={plan.slots}, a_max={plan.a_max}, "
+            f"d_cap={plan.d_cap}, rel_cap={plan.rel_cap}, "
+            f"m_evict={plan.m_evict}).  The sound bound should never be "
+            f"exceeded — please report; as a workaround, rerun with "
+            f"SimConfig(scan_slots={plan.slots + int(overflow_f)}) to "
+            f"widen the job table")
     series = e_t.astype(np.float64)
     # replay the per-event placement log chronologically: within an epoch
     # movers precede new arrivals (host step-4 order); a job appears at
@@ -1402,7 +1611,12 @@ def _scan_result(run: _ScanRun, carry, ys) -> SimResult:
         node_log=node_log, first_node=first_node,
         emissions_series=series,
         deadline_misses=int(miss_t.sum()) + still_q,
-        defer_delay_h=delay_h, start_epoch=start_epoch)
+        defer_delay_h=delay_h,
+        migrations_failed=int(failed_t.sum()),
+        jobs_active_end=int((np.asarray(carry[2]) >= 0).sum()),
+        safe_epochs=int(run.fplan.safe.sum())
+        if run.fplan is not None else 0,
+        start_epoch=start_epoch)
 
 
 def simulate_fleet_scan(fleet0: Fleet, region_ci: np.ndarray,

@@ -30,6 +30,11 @@ class HealthMonitor:
     straggler_factor: float = 1.5
     ewma_alpha: float = 0.2
     heartbeat_timeout_s: float = 60.0
+    # injectable clock: tests (and the simulator's fault harness) pass a
+    # deterministic counter so missed-heartbeat detection is reproducible;
+    # production keeps the monotonic wall clock.  An explicit ``now``
+    # argument still overrides the clock per call.
+    clock: Callable[[], float] = time.monotonic
     _ewma: Dict[str, float] = dataclasses.field(default_factory=dict)
     _last_beat: Dict[str, float] = dataclasses.field(default_factory=dict)
 
@@ -38,7 +43,7 @@ class HealthMonitor:
         prev = self._ewma.get(node, step_time_s)
         self._ewma[node] = (1 - self.ewma_alpha) * prev \
             + self.ewma_alpha * step_time_s
-        self._last_beat[node] = time.monotonic() if now is None else now
+        self._last_beat[node] = self.clock() if now is None else now
 
     def median_step(self) -> float:
         return float(np.median(list(self._ewma.values()))) if self._ewma \
@@ -57,7 +62,7 @@ class HealthMonitor:
                 and self._ewma[node] > self.straggler_factor * med)
 
     def failed_nodes(self, now: Optional[float] = None) -> List[str]:
-        now = time.monotonic() if now is None else now
+        now = self.clock() if now is None else now
         return [n for n, t in self._last_beat.items()
                 if now - t > self.heartbeat_timeout_s]
 

@@ -31,6 +31,34 @@ def test_health_monitor_detects_dead_nodes():
     assert mon.failed_nodes(now=112.0) == ["a"]
 
 
+def test_health_monitor_injected_clock_is_deterministic():
+    """With an injected fake clock, failure detection is a pure function
+    of the recorded steps — two monitors fed the same sequence agree
+    exactly, independent of wall time."""
+    def make():
+        ticks = iter(range(0, 10_000, 5))
+        return HealthMonitor(heartbeat_timeout_s=12.0,
+                             clock=lambda: float(next(ticks)))
+
+    runs = []
+    for _ in range(2):
+        mon = make()
+        for step, node in enumerate("abcabca"):
+            mon.record_step(node, 1.0 + 0.1 * step)
+        runs.append((mon.failed_nodes(), sorted(mon._ewma.items())))
+    assert runs[0] == runs[1]
+    # clock advanced 5s per beat: c last beat at t=25, a at t=30 — at the
+    # failed_nodes() call (t=35) only b (t=20) is past the 12s timeout
+    assert runs[0][0] == ["b"]
+
+
+def test_health_monitor_explicit_now_overrides_clock():
+    boom = HealthMonitor(clock=lambda: 1 / 0, heartbeat_timeout_s=10.0)
+    boom.record_step("a", 1.0, now=100.0)
+    assert boom.failed_nodes(now=115.0) == ["a"]
+    assert boom.failed_nodes(now=105.0) == []
+
+
 def test_migration_policy_hysteresis():
     pol = MigrationPolicy(min_rank_advantage=0.2, cooldown_steps=100)
     scores = np.array([0.5, 0.45, 0.9])
