@@ -18,6 +18,9 @@ Usage (one call per artifact kind):
     python benchmarks/check_regression.py --kind robustness \
         --current BENCH_robustness.json \
         --baseline benchmarks/baselines/BENCH_robustness_smoke.json
+    python benchmarks/check_regression.py --kind energy \
+        --current BENCH_energy.json \
+        --baseline benchmarks/baselines/BENCH_energy_smoke.json
 
 Gates (exit 1 on any):
 - **parity breaks**: any parity flag false in the current artifact
@@ -46,6 +49,12 @@ Gates (exit 1 on any):
   operator's dropout curve non-monotone, or persistence fallback no
   longer beating naive stale-trust at 100% dropout — all
   machine-independent flags, gated at smoke scale too;
+- **energy regressions** (``--kind energy``): default EnergyModel no
+  longer bitwise-reproducing the historical path on both drivers,
+  per-tenant attribution breaking conservation, the calibration grid
+  splitting into multiple compiled buckets, or the marginal-CFP ranking
+  emitting more than the reactive total-CFP ranking — machine-independent
+  flags, gated at smoke scale too;
 - **runtime regressions**: any matched runtime metric slower than baseline
   by more than ``--runtime-tol`` (default 1.5x).  Baselines carry numbers
   from the machine class that produced them; regenerate them (rerun the
@@ -263,6 +272,35 @@ def check_robustness(base: dict, cur: dict, t: Table, tol: float) -> None:
                       c.get("ens_s"), tol)
 
 
+def check_energy(base: dict, cur: dict, t: Table, tol: float) -> None:
+    """EnergyModel gates (BENCH_energy.json, see repro.core.energy):
+    the default model must reproduce the implicit historical path
+    bitwise on both drivers, per-tenant attribution must conserve fleet
+    totals, the (idle x embodied x marginal x overhead) calibration grid
+    must share ONE compiled ensemble bucket, and the marginal-CFP
+    ranking variant must emit no more than the reactive total-CFP
+    ranking (slack-bearing flag recorded by the bench; tight at
+    acceptance scale).  All four are machine-independent flags, so they
+    gate at smoke scale too; the saving delta + runtime ratio compare
+    against the committed baseline."""
+    for key, b, c in _match(base, cur):
+        tag = f"n={key[0]}/t={key[1]}"
+        t.check_flag(f"{tag} default-model parity bitwise",
+                     c.get("parity_bitwise"))
+        t.check_flag(f"{tag} tenant attribution conserved",
+                     c.get("tenant_conservation_ok"))
+        t.check_flag(f"{tag} calibration grid one compiled bucket",
+                     c.get("one_bucket"))
+        t.check_flag(f"{tag} marginal no worse than reactive",
+                     c.get("marginal_no_worse"))
+        t.check_delta(f"{tag} marginal best saving pct",
+                      b.get("marginal_best_saving_pct"),
+                      c.get("marginal_best_saving_pct"),
+                      slack=0.5, higher_is_better=True)
+        t.check_ratio(f"{tag} ensemble s", b.get("ens_s"),
+                      c.get("ens_s"), tol)
+
+
 def check_ensemble(base: dict, cur: dict, t: Table, tol: float) -> None:
     """Batched-ensemble gates (the ``ensemble`` block bench_policy
     records): per-trajectory parity with the sequential scan is a hard
@@ -307,7 +345,7 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--kind",
                     choices=("sim", "placement", "policy", "ensemble",
-                             "robustness"),
+                             "robustness", "energy"),
                     required=True)
     ap.add_argument("--current", required=True)
     ap.add_argument("--baseline", required=True)
@@ -332,6 +370,8 @@ def main() -> int:
             check_ensemble(base, cur, t, args.runtime_tol)
         elif args.kind == "robustness":
             check_robustness(base, cur, t, args.runtime_tol)
+        elif args.kind == "energy":
+            check_energy(base, cur, t, args.runtime_tol)
         else:
             check_sim(base, cur, t, args.runtime_tol)
         if not t.rows:

@@ -15,6 +15,10 @@ Framework benches:
   robustness           — signal-fault degradation curve: degraded vs
                          naive vs clean oracle + chaos parity probe
                          (BENCH_robustness.json)
+  energy               — unified EnergyModel study: default-model parity,
+                         marginal-CFP vs reactive ranking, per-tenant
+                         attribution, workload calibration
+                         (BENCH_energy.json)
   train_step_smoke     — reduced-arch train step wall time (CPU)
   decode_step_smoke    — reduced-arch decode step wall time (CPU)
   roofline_report      — aggregates results/dryrun/*.json (see §Roofline)
@@ -828,6 +832,177 @@ def bench_robustness():
             f"naive {full['naive']['co2_penalty_pct']:+.3f}%")
 
 
+def bench_energy():
+    """Unified EnergyModel study (see repro.core.energy):
+
+    - **parity hard-gate** — an explicitly-passed default ``EnergyModel``
+      must reproduce the implicit historical path BITWISE on both
+      drivers (placement digests equal), and per-tenant attribution must
+      conserve fleet totals on both;
+    - **one-bucket gate** — an (idle-frac x embodied x marginal-weight x
+      migration-overhead) calibration grid must hash to ONE ensemble
+      graph bucket (all model values ride as traced data);
+    - **marginal-vs-reactive** — with power-off-idle fleets accounted
+      under a two-part model (embodied gCO2 amortized per node-on-hour),
+      the Eq. 1 marginal-CFP variant is swept over
+      ``RankWeights.marginal`` in one batched ensemble against the
+      reactive total-CFP ranking (marginal=0 lane).  The best marginal
+      lane must emit no more than reactive (slack covers packing noise
+      at smoke scale);
+    - **workload calibration** — roofline-calibrated chip watts per
+      (arch, shape) cell from ``configs/``, recorded for EXPERIMENTS.md.
+
+    Env knobs: ENERGY_NS / ENERGY_EPOCHS / ENERGY_SEEDS / ENERGY_EMBODIED
+    (defaults 512 / 360 / 3 seeds / 500 g per node-hour; CI smoke
+    shrinks the first three).  Emits BENCH_energy.json; exits nonzero at
+    ANY scale on a parity/conservation/bucket break, and at acceptance
+    scale on the marginal ranking losing to reactive."""
+    import hashlib
+    from repro.configs import ARCHS, SHAPES
+    from repro.core.energy import DEFAULT_ENERGY, EnergyModel
+    from repro.core.ranking import RankWeights
+    from repro.core.simulator import (SimConfig, _bucket_key,
+                                      _prepare_scan_run, generate_jobs,
+                                      simulate_fleet,
+                                      simulate_fleet_ensemble,
+                                      simulate_fleet_scan,
+                                      synthetic_lifecycle_fleet)
+    n = int(os.environ.get("ENERGY_NS", "512"))
+    epochs = int(os.environ.get("ENERGY_EPOCHS", "360"))
+    seeds = tuple(int(x) for x in
+                  os.environ.get("ENERGY_SEEDS", "1,2,3").split(","))
+    embodied = float(os.environ.get("ENERGY_EMBODIED", "500"))
+    marginals = (0.0, 0.1, 0.25, 0.5)
+    gate_scale = n >= 512 and epochs >= 360
+
+    def digest(r):
+        return hashlib.sha256(np.concatenate(
+            [r.node_log, r.first_node]).tobytes()).hexdigest()[:16]
+
+    # --- parity hard-gate: explicit default model == implicit path -----
+    pcfg = SimConfig(epochs=min(epochs, 48), seed=3, arrival_rate=6.0,
+                     mean_duration_h=6.0, shortlist=16, history_h=48,
+                     horizon_h=8, n_tenants=4)
+    pf, ptr, pri = synthetic_lifecycle_fleet(96, pcfg, chips_per_node=64)
+    pjobs = generate_jobs(pcfg)
+    h_imp = simulate_fleet(pf, ptr, pri, pcfg, jobs=pjobs)
+    ecfg = dataclasses.replace(pcfg, energy=EnergyModel())
+    h_exp = simulate_fleet(pf, ptr, pri, ecfg, jobs=pjobs)
+    s_exp = simulate_fleet_scan(pf, ptr, pri, ecfg, jobs=pjobs)
+    parity = digest(h_imp) == digest(h_exp) == digest(s_exp)
+    ten_err = max(
+        abs(h_exp.tenant_emissions_g.sum() / h_exp.emissions_g - 1.0),
+        abs(s_exp.tenant_emissions_g.sum() / s_exp.emissions_g - 1.0))
+    tenant_ok = bool(ten_err < 1e-4)
+    row("energy_parity", 0.0,
+        f"bitwise={parity};tenant_rel_err={ten_err:.2e}")
+
+    # --- marginal-CFP vs reactive, one batched ensemble ----------------
+    acct = EnergyModel(embodied_g_per_node_h=embodied)
+    runs, metas = [], []
+    for seed in seeds:
+        cfg = SimConfig(epochs=epochs, seed=seed, arrival_rate=n / 8.0,
+                        mean_duration_h=12.0, deferrable_frac=0.1,
+                        shortlist=64, power_off_idle=True, energy=acct)
+        fleet, traces, ridx = synthetic_lifecycle_fleet(n, cfg,
+                                                        chips_per_node=64)
+        jobs = generate_jobs(cfg)
+        for m in marginals:
+            c = dataclasses.replace(cfg, weights=RankWeights(marginal=m))
+            runs.append((fleet, traces, ridx, c, jobs))
+            metas.append((m, seed))
+
+    # one-bucket gate over the full calibration grid (graph keys): the
+    # marginal sweep above PLUS idle-frac, embodied and overhead variants
+    # must all share the reactive lane's compiled trajectory
+    f0, tr0, ri0, c0, j0 = runs[0]
+    keys = {_bucket_key(_prepare_scan_run(f, tr, ri, c, j))
+            for f, tr, ri, c, j in runs}
+    for variant in (
+            dataclasses.replace(c0, energy=EnergyModel(
+                idle_frac=0.2, embodied_g_per_node_h=embodied)),
+            dataclasses.replace(c0, energy=EnergyModel()),
+            dataclasses.replace(c0, migration_overhead_h=0.7)):
+        keys.add(_bucket_key(_prepare_scan_run(f0, tr0, ri0, variant, j0)))
+    one_bucket = len(keys) == 1
+    row("energy_one_bucket", 0.0,
+        f"buckets={len(keys)};lanes={len(runs)}+3 variants")
+
+    t0 = time.perf_counter()
+    results = simulate_fleet_ensemble(runs)
+    ens_s = time.perf_counter() - t0
+    by = {m: r for m, r in zip(metas, results)}
+
+    def agg(m):
+        return float(np.mean([by[(m, s)].emissions_g for s in seeds]))
+
+    reactive = agg(0.0)
+    curve = []
+    for m in marginals:
+        e = agg(m)
+        curve.append({"marginal": m, "emissions_g": e,
+                      "saving_vs_reactive_pct":
+                      100.0 * (1.0 - e / reactive)})
+        row(f"energy_marginal_w{m:g}", 0.0,
+            f"emissions={e:.3e};saving="
+            f"{curve[-1]['saving_vs_reactive_pct']:+.3f}%")
+    best = max(curve[1:], key=lambda p: p["saving_vs_reactive_pct"])
+    # slack covers bin-packing noise, not signal: the acceptance-scale
+    # gate is tight, the smoke-scale flag tolerant
+    slack_pct = 0.1 if gate_scale else 1.0
+    no_worse = bool(best["emissions_g"]
+                    <= reactive * (1.0 + slack_pct / 100.0))
+    row(f"energy_ensemble_n{n}_t{epochs}",
+        ens_s * 1e6 / max(len(runs), 1),
+        f"lanes={len(runs)};best_marginal={best['marginal']:g};"
+        f"best_saving={best['saving_vs_reactive_pct']:+.3f}%;"
+        f"no_worse={no_worse}")
+
+    # --- workload calibration report -----------------------------------
+    cal = {}
+    for aname, arch in sorted(ARCHS.items()):
+        for sname in ("train_4k", "decode_32k"):
+            cal[f"{aname}/{sname}"] = round(DEFAULT_ENERGY.for_workload(
+                arch, SHAPES[sname]).chip_power_w, 2)
+    spread = (min(cal.values()), max(cal.values()))
+    row("energy_calibration_chip_w", 0.0,
+        f"min={spread[0]};max={spread[1]};cells={len(cal)}")
+
+    entry = {"n": n, "epochs": epochs, "gate_scale": gate_scale,
+             "seeds": list(seeds), "marginals": list(marginals),
+             "embodied_g_per_node_h": embodied,
+             "parity_bitwise": bool(parity),
+             "tenant_conservation_ok": tenant_ok,
+             "tenant_rel_err": ten_err,
+             "one_bucket": bool(one_bucket),
+             "lanes": len(runs), "ens_s": ens_s,
+             "reactive_emissions_g": reactive,
+             "curve": curve,
+             "marginal_best": best["marginal"],
+             "marginal_best_saving_pct": best["saving_vs_reactive_pct"],
+             "marginal_no_worse": no_worse,
+             "calibration_chip_w": cal}
+    write_artifact("BENCH_energy.json", {"configs": [entry]},
+                   {"n": n, "epochs": epochs, "seeds": list(seeds),
+                    "embodied": embodied})
+    if not parity:
+        raise SystemExit(
+            "default EnergyModel no longer reproduces the implicit "
+            "historical path bitwise on both drivers")
+    if not tenant_ok:
+        raise SystemExit(
+            f"per-tenant attribution broke conservation "
+            f"(rel err {ten_err:.2e})")
+    if not one_bucket:
+        raise SystemExit(
+            f"energy calibration grid split into {len(keys)} compiled "
+            f"buckets — a model value leaked into the graph statics")
+    if gate_scale and not no_worse:
+        raise SystemExit(
+            f"marginal-CFP ranking lost to reactive at acceptance "
+            f"scale: best {best['saving_vs_reactive_pct']:+.3f}%")
+
+
 def bench_train_step_smoke():
     from repro.configs import ARCHS
     from repro.models.model import ModelFlags, build_model
@@ -896,6 +1071,7 @@ BENCHES = {
     "sim_scale": bench_sim_scale,
     "policy": bench_policy,
     "robustness": bench_robustness,
+    "energy": bench_energy,
     "train_step_smoke": bench_train_step_smoke,
     "decode_step_smoke": bench_decode_step_smoke,
     "roofline_report": bench_roofline_report,

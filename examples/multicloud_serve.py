@@ -10,6 +10,11 @@ slots and the next batch arrives in one event stream (release + arrival),
 exactly like the rolling fleet simulator's epochs; gCO2/request is compared
 against round-robin routing.
 
+Each batch belongs to a tenant; the example closes with a per-tenant gCO2
+attribution report (the serving-side miniature of the fleet simulator's
+``SimConfig.n_tenants`` accounting) — attributed emissions sum exactly to
+the fleet total.
+
 Run:  PYTHONPATH=src python examples/multicloud_serve.py
 """
 import jax
@@ -54,8 +59,12 @@ def region_fleet(hour: int, capacity: jnp.ndarray) -> Fleet:
         chips_total=jnp.full((3,), BATCH_SLOTS, jnp.int32))
 
 
+TENANTS = ["acme", "globex", "initech"]
+
 rng = np.random.default_rng(0)
 g_aware = g_rr = 0.0
+tenant_g = {t: 0.0 for t in TENANTS}
+tenant_req = {t: 0 for t in TENANTS}
 total_sweeps = 0
 capacity = jnp.full((3,), BATCH_SLOTS, jnp.int32)
 prev_node = -1
@@ -82,14 +91,29 @@ for b in range(N_BATCHES):
     results = engines[aware].generate(prompts, max_new=4)
     assert len(results) == BATCH_SLOTS
 
-    g_aware += float(carbon_footprint(ENERGY_PER_BATCH_KWH, pue[aware],
-                                      ci[aware][b]))
+    g_batch = float(carbon_footprint(ENERGY_PER_BATCH_KWH, pue[aware],
+                                     ci[aware][b]))
+    g_aware += g_batch
+    tenant = TENANTS[int(rng.integers(len(TENANTS)))]
+    tenant_g[tenant] += g_batch
+    tenant_req[tenant] += BATCH_SLOTS
     g_rr += float(carbon_footprint(ENERGY_PER_BATCH_KWH, pue[rr], ci[rr][b]))
     print(f"batch {b:2d}: routed->{aware} (rr would use {rr}); "
-          f"tokens {results[0].tokens}")
+          f"tenant {tenant}; tokens {results[0].tokens}")
 
 n_req = N_BATCHES * BATCH_SLOTS
 print(f"\ncarbon-aware: {g_aware / n_req:.2f} gCO2/request | "
       f"round-robin: {g_rr / n_req:.2f} gCO2/request | "
       f"saving {100 * (1 - g_aware / g_rr):.1f}% | "
       f"{total_sweeps} rank sweeps for {N_BATCHES} routing decisions")
+
+# per-tenant attribution report: emissions are split by who ran on the
+# routed replica, so the per-tenant column sums exactly to the fleet total
+print("\ntenant      requests   gCO2     gCO2/req   share")
+for t in TENANTS:
+    share = 100.0 * tenant_g[t] / g_aware if g_aware else 0.0
+    per = tenant_g[t] / tenant_req[t] if tenant_req[t] else 0.0
+    print(f"{t:<11s} {tenant_req[t]:8d}   {tenant_g[t]:7.2f}  "
+          f"{per:8.2f}   {share:5.1f}%")
+print(f"{'total':<11s} {n_req:8d}   {g_aware:7.2f}")
+assert abs(sum(tenant_g.values()) - g_aware) < 1e-9 * max(g_aware, 1.0)

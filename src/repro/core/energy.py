@@ -1,0 +1,204 @@
+"""Unified two-part energy/carbon cost model.
+
+Every layer that used to hardcode energy arithmetic — ``IDLE_POWER_FRAC``
+in ``fleet.py``, the TPU chip/host watts baked into
+``carbon.job_energy_kwh``, and the hand-mirrored f32 constants inside the
+scan driver — now reads from one :class:`EnergyModel` instance.  The model
+is a registered pytree so it can be threaded as *traced data* through the
+placement engines and both simulator drivers: an (idle-frac × embodied ×
+marginal-weight) calibration grid shares a single compiled graph.
+
+Two-part cost ("Chasing Carbon", PAPERS.md): *dynamic* power scales with
+utilization on top of an idle floor, while *embodied* carbon is amortized
+per node-hour whenever a node is powered on.  The marginal-CFP ranking
+variant (``RankWeights.marginal``) charges only dynamic power to nodes
+that are already on and the full two-part cost (idle floor + embodied) to
+nodes that would have to be powered on — the principled alternative to the
+SCHEDULE_WEIGHT consolidation bonus.
+
+Default model reproduces historical behavior bit-exactly: the host loop
+sees the same f64 values ``carbon.job_energy_kwh`` produced, and
+``device()`` lowers them to f32 host-side so the scan core sees bitwise
+the constants it used to inline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.carbon import CHIP_POWER_W, HOST_POWER_W
+
+#: Historical idle floor: an idle-but-on node draws this fraction of
+#: nameplate power (canonical value lived in ``fleet.IDLE_POWER_FRAC``).
+_IDLE_POWER_FRAC = 0.35
+
+
+@dataclass(frozen=True)
+class EnergyModel:
+    """Two-part (dynamic + embodied) energy/carbon model.
+
+    Host instances hold python floats (hashable, exact f64); ``device()``
+    returns an all-``jnp.float32``-leaf twin for use inside jit/scan.
+    ``dyn_frac`` is stored explicitly rather than recomputed as
+    ``1 - idle_frac`` inside traced code so the f64→f32 rounding happens
+    once, host-side — the scan core then matches the host loop's weak-type
+    promotion bit-for-bit.
+    """
+
+    idle_frac: float = _IDLE_POWER_FRAC
+    chip_power_w: float = CHIP_POWER_W
+    host_power_w: float = HOST_POWER_W
+    #: Amortized embodied carbon charged per node-hour while powered on.
+    embodied_g_per_node_h: float = 0.0
+    #: Weight of the marginal-CFP ranking term (0 = historical ranking).
+    w_marginal: float = 0.0
+    #: Dynamic fraction; derived from ``idle_frac`` unless given.
+    dyn_frac: Optional[float] = None
+    #: Chips per host board (static — indexes the host-power share).
+    chips_per_host: int = 8
+
+    def __post_init__(self):
+        if self.dyn_frac is None:
+            object.__setattr__(self, "dyn_frac", 1.0 - self.idle_frac)
+
+    # ---- per-job energy (mirrors carbon.job_energy_kwh op-for-op) ----
+
+    def job_energy_kwh(self, step_time_s, steps, chips):
+        """Energy for a job: identical op order to ``carbon.job_energy_kwh``."""
+        wall_s = step_time_s * steps
+        watts = chips * self.chip_power_w + (
+            chips / float(self.chips_per_host)
+        ) * self.host_power_w
+        return wall_s / 3600.0 * watts / 1000.0
+
+    @property
+    def e_kwh_h(self):
+        """kWh for one chip-hour (0.30625 for the default TPU model)."""
+        return self.job_energy_kwh(3600.0, 1, 1)
+
+    def ckpt_kwh(self, overhead_h):
+        """kWh for one chip checkpointing for ``overhead_h`` hours."""
+        return self.job_energy_kwh(overhead_h * 3600.0, 1, 1)
+
+    # ---- fleet-level power ----
+
+    @property
+    def chip_kw(self):
+        """Chip-only kW (0.25 default) — nameplate unit for fleet power_kw.
+
+        Fleet ``power_kw`` is chip-only by construction (host share enters
+        via the per-job energy model), preserving the historical
+        ``chips_per_node * 0.25`` fleet scaling bit-exactly.
+        """
+        return self.chip_power_w / 1000.0
+
+    @property
+    def watts_per_chip(self):
+        """Full per-chip draw incl. amortized host share (306.25 default)."""
+        return self.chip_power_w + self.host_power_w / float(self.chips_per_host)
+
+    def node_kw(self, chips):
+        """Nameplate node kW incl. host share for ``chips`` chips."""
+        return chips * self.watts_per_chip / 1000.0
+
+    # ---- variants ----
+
+    def with_marginal(self, w_marginal):
+        return dataclasses.replace(self, w_marginal=float(w_marginal))
+
+    def device(self, w_marginal=None):
+        """f32-leaf twin for traced use; optionally override ``w_marginal``."""
+        wm = self.w_marginal if w_marginal is None else float(w_marginal)
+        return EnergyModel(
+            idle_frac=jnp.float32(self.idle_frac),
+            chip_power_w=jnp.float32(self.chip_power_w),
+            host_power_w=jnp.float32(self.host_power_w),
+            embodied_g_per_node_h=jnp.float32(self.embodied_g_per_node_h),
+            w_marginal=jnp.float32(wm),
+            dyn_frac=jnp.float32(self.dyn_frac),
+            chips_per_host=self.chips_per_host,
+        )
+
+    # ---- workload calibration ----
+
+    def for_workload(self, arch, shape, chips=8, floor=0.3):
+        """Calibrate dynamic chip power to a model config's roofline util.
+
+        Derives an analytic roofline step time from ``arch``
+        (a ``configs.base.ArchConfig``) and ``shape`` (a ``ShapeSpec``);
+        the compute fraction of the step scales chip watts between
+        ``floor`` (fully memory/IO-bound) and 1.0 (compute-bound), so every
+        config in ``configs/`` becomes a distinct workload mix instead of
+        a flat ``chips × 250W``.
+        """
+        r = workload_roofline(arch, shape, chips=chips)
+        util = r.compute_s / r.step_s if r.step_s > 0 else 1.0
+        scale = floor + (1.0 - floor) * min(1.0, util)
+        return dataclasses.replace(self, chip_power_w=self.chip_power_w * scale)
+
+
+jax.tree_util.register_dataclass(
+    EnergyModel,
+    data_fields=[
+        "idle_frac",
+        "chip_power_w",
+        "host_power_w",
+        "embodied_g_per_node_h",
+        "w_marginal",
+        "dyn_frac",
+    ],
+    meta_fields=["chips_per_host"],
+)
+
+
+#: Canonical default — reproduces all historical constants exactly.
+DEFAULT_ENERGY = EnergyModel()
+
+
+def workload_roofline(arch, shape, chips=8):
+    """Analytic roofline for one step of ``arch`` at ``shape``.
+
+    Constructs a ``launch.roofline.Roofline`` from first principles
+    (matmul FLOPs on active params + attention FLOPs, weight-pass HBM
+    bytes) rather than from an HLO dump, so calibration needs no compile.
+    Imports live inside the function to avoid a core → launch cycle at
+    module import time.
+    """
+    from repro.launch.roofline import Roofline
+
+    p_active = arch.active_param_count()
+    tokens = shape.tokens
+    train = shape.kind == "train"
+    fb_mult = 3.0 if train else 1.0  # fwd + bwd ≈ 2x fwd
+
+    # Matmul FLOPs: 2 * P_active per token per pass.
+    flops = 2.0 * p_active * tokens * fb_mult
+    # Attention FLOPs: 4 * L * d_attn * s_eff per token (QK^T + AV),
+    # honoring sliding-window attention via the effective context length.
+    if arch.has_attention:
+        d_attn = arch.n_heads * arch.head_dim
+        s_eff = float(
+            min(shape.seq_len, arch.window)
+            if arch.attention == "swa"
+            else shape.seq_len
+        )
+        flops += 4.0 * arch.n_layers * d_attn * s_eff * tokens * fb_mult
+
+    # HBM traffic: one weight pass per step (bf16), times seq_len passes
+    # for token-by-token decode.
+    weight_bytes = 2.0 * p_active
+    passes = float(shape.seq_len) if shape.kind == "decode" else 1.0
+    bytes_per_dev = weight_bytes * passes / chips
+
+    return Roofline(
+        flops_per_device=flops / chips,
+        bytes_per_device=bytes_per_dev,
+        collective_bytes_per_device=0.0,
+        per_kind={},
+        chips=chips,
+    )

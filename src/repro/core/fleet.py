@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import telemetry
+from repro.core.energy import DEFAULT_ENERGY, EnergyModel
 from repro.core.ranking import RankWeights, maiz_ranking
 
 # Affine server power model (the jnp twin of telemetry.NodePower): a node at
@@ -22,7 +23,8 @@ from repro.core.ranking import RankWeights, maiz_ranking
 # power rises linearly with occupied chips.  This makes CFP/FCFP — and hence
 # MAIZ_RANKING — genuinely depend on what has already been placed, which the
 # incremental shortlist engine in repro.core.placement exploits.
-IDLE_POWER_FRAC = 0.35
+# Canonical value now lives in ``core.energy``; re-exported for backcompat.
+IDLE_POWER_FRAC = DEFAULT_ENERGY.idle_frac
 
 
 @jax.tree_util.register_dataclass
@@ -44,13 +46,14 @@ class Fleet:
         return self.ci_now.shape[0]
 
     def effective_power_kw(self,
-                           capacity: Optional[jax.Array] = None) -> jax.Array:
+                           capacity: Optional[jax.Array] = None,
+                           energy: Optional[EnergyModel] = None) -> jax.Array:
         """Utilization-dependent draw: idle + linear dynamic power."""
         cap = self.capacity if capacity is None else capacity
         util = 1.0 - cap.astype(jnp.float32) / jnp.maximum(
             self.chips_total.astype(jnp.float32), 1.0)
-        return self.power_kw * (IDLE_POWER_FRAC
-                                + (1.0 - IDLE_POWER_FRAC) * util)
+        em = DEFAULT_ENERGY if energy is None else energy
+        return self.power_kw * (em.idle_frac + em.dyn_frac * util)
 
     @property
     def sched_term(self) -> jax.Array:
@@ -58,12 +61,13 @@ class Fleet:
         return self.straggler_score + jnp.where(self.healthy, 0.0, 1e3)
 
     def raw_terms(self, *, horizon_h: float = 1.0,
-                  capacity: Optional[jax.Array] = None):
+                  capacity: Optional[jax.Array] = None,
+                  energy: Optional[EnergyModel] = None):
         """The four un-normalized Eq. 1 terms (cfp, fcfp, cp_ratio, sched).
 
         ``capacity`` overrides the stored free-chip vector so placement can
         score hypothetical occupancy states without rebuilding the Fleet."""
-        energy_kwh = self.effective_power_kw(capacity) * horizon_h
+        energy_kwh = self.effective_power_kw(capacity, energy) * horizon_h
         cfp = energy_kwh * self.pue * self.ci_now
         fcfp = energy_kwh * self.pue * self.ci_forecast
         return cfp, fcfp, self.flops_per_j, self.sched_term
@@ -71,11 +75,22 @@ class Fleet:
     def rank(self, *, horizon_h: float = 1.0,
              weights: RankWeights = RankWeights(),
              demand_chips: Optional[jax.Array] = None,
-             capacity: Optional[jax.Array] = None) -> jax.Array:
+             capacity: Optional[jax.Array] = None,
+             energy: Optional[EnergyModel] = None) -> jax.Array:
         """Eq. 1 scores for placing a job of ``demand_chips`` chips."""
         cfp, fcfp, eff, sched = self.raw_terms(horizon_h=horizon_h,
-                                               capacity=capacity)
-        scores = maiz_ranking(cfp, fcfp, eff, sched, weights)
+                                               capacity=capacity,
+                                               energy=energy)
+        mcfp = None
+        if energy is not None and weights.marginal:
+            cap = self.capacity if capacity is None else capacity
+            from repro.core.ranking import marginal_cfp
+            mcfp = marginal_cfp(cfp, self.chips_total, energy.idle_frac,
+                                energy.dyn_frac,
+                                cap == self.chips_total,
+                                energy.embodied_g_per_node_h, horizon_h)
+        scores = maiz_ranking(cfp, fcfp, eff, sched, weights,
+                              marginal_cfp=mcfp)
         if demand_chips is not None:
             cap = self.capacity if capacity is None else capacity
             scores = jnp.where(cap >= demand_chips, scores, jnp.inf)
@@ -83,7 +98,8 @@ class Fleet:
 
 
 def synthetic_fleet(n: int, seed: int = 0, chips_per_node: int = 256,
-                    hour: int = 0) -> Fleet:
+                    hour: int = 0,
+                    energy: EnergyModel = DEFAULT_ENERGY) -> Fleet:
     """Deterministic synthetic fleet spanning the paper's three regions.
 
     Each region has one hourly CI trace (seeded ``seed + region``); nodes
@@ -101,8 +117,12 @@ def synthetic_fleet(n: int, seed: int = 0, chips_per_node: int = 256,
         ci_forecast=jnp.asarray(ci[:, hour:hour + 24].mean(-1), jnp.float32),
         pue=jnp.asarray(
             np.array([r.pue for r in regions])[ridx], jnp.float32),
+        # Nameplate is chip-only (energy.chip_kw = 0.25 for the default
+        # TPU model); the host-board share enters through the per-job
+        # energy model, not the fleet power vector.
         power_kw=jnp.asarray(
-            chips_per_node * 0.25 * (1 + 0.1 * rng.random(n)), jnp.float32),
+            chips_per_node * energy.chip_kw * (1 + 0.1 * rng.random(n)),
+            jnp.float32),
         capacity=jnp.asarray(
             rng.integers(0, chips_per_node + 1, n), jnp.int32),
         healthy=jnp.asarray(rng.random(n) > 0.02),

@@ -88,6 +88,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.energy import DEFAULT_ENERGY, EnergyModel
 from repro.core.fleet import IDLE_POWER_FRAC, Fleet
 from repro.core.ranking import RankWeights
 
@@ -136,7 +137,8 @@ def _lo_rcp(t):
 
 
 def frozen_ctx(fleet: Fleet, weights: RankWeights = RankWeights(),
-               horizon_h: float = 1.0) -> Dict[str, jax.Array]:
+               horizon_h: float = 1.0,
+               energy: Optional[EnergyModel] = None) -> Dict[str, jax.Array]:
     """One-time per-placement context: cap-independent Eq. 1 pieces.
 
     ``a_now``/``a_fc`` are full-load CFP/FCFP rates (power·pue·ci·h); the
@@ -144,7 +146,14 @@ def frozen_ctx(fleet: Fleet, weights: RankWeights = RankWeights(),
     weighted normalized sum collapses into the per-node ``static`` vector.
     All divisions happen here, once — the per-evaluation path is
     division-free (see module docstring).  ``lohi`` is the (4, 2) matrix the
-    fused Pallas kernel consumes for the same normalization."""
+    fused Pallas kernel consumes for the same normalization.
+
+    ``energy`` threads the two-part :class:`EnergyModel` as traced data:
+    idle/dynamic fractions replace the module constants, and the marginal-
+    CFP term's context (``m_dyn``/``m_wake``, its frozen normalizer, the
+    traced weight ``w_m``) is materialized.  ``energy=None`` with
+    ``weights.marginal == 0`` reproduces the historical graph exactly —
+    no marginal entries, constants inlined."""
     pk = fleet.power_kw * horizon_h
     a_now = pk * fleet.pue * fleet.ci_now
     a_fc = pk * fleet.pue * fleet.ci_forecast
@@ -158,9 +167,14 @@ def frozen_ctx(fleet: Fleet, weights: RankWeights = RankWeights(),
 
     static = (weights.w3 * (1.0 - mm(eff)) + weights.w4 * mm(sched))
 
+    em = energy
+    if em is None and weights.marginal:
+        em = DEFAULT_ENERGY.device(w_marginal=weights.marginal)
+    idle_f = IDLE_POWER_FRAC if em is None else em.idle_frac
+    dyn_f = (1.0 - IDLE_POWER_FRAC) if em is None else em.dyn_frac
+
     cap0 = fleet.capacity.astype(jnp.float32)
-    factor0 = (IDLE_POWER_FRAC
-               + (1.0 - IDLE_POWER_FRAC) * (1.0 - cap0 * inv_total))
+    factor0 = idle_f + dyn_f * (1.0 - cap0 * inv_total)
     cfp0, fcfp0 = a_now * factor0, a_fc * factor0
     lo_now, rcp_now, hi_now = _lo_rcp(cfp0)
     lo_fc, rcp_fc, hi_fc = _lo_rcp(fcfp0)
@@ -168,12 +182,29 @@ def frozen_ctx(fleet: Fleet, weights: RankWeights = RankWeights(),
         jnp.stack([lo_now, hi_now]), jnp.stack([lo_fc, hi_fc]),
         jnp.stack([eff.min(), eff.max()]),
         jnp.stack([sched.min(), sched.max()])])
-    return dict(a_now=a_now, a_fc=a_fc, inv_total=inv_total, static=static,
-                lo_now=lo_now, rcp_now=rcp_now, lo_fc=lo_fc, rcp_fc=rcp_fc,
-                lohi=lohi)
+    ctx = dict(a_now=a_now, a_fc=a_fc, inv_total=inv_total, static=static,
+               idle_f=idle_f, dyn_f=dyn_f,
+               lo_now=lo_now, rcp_now=rcp_now, lo_fc=lo_fc, rcp_fc=rcp_fc,
+               lohi=lohi)
+    if em is not None:
+        # Marginal-CFP context: per-chip dynamic carbon for on nodes, the
+        # two-part wake price (idle floor + amortized embodied carbon over
+        # the horizon) for powered-off ones.  Normalizer frozen at entry
+        # like every other term.  The term is always evaluated when these
+        # entries exist; with traced ``w_m == 0`` it adds exactly +0.0.
+        ct_f = fleet.chips_total.astype(jnp.float32)
+        m_dyn = a_now * inv_total * dyn_f
+        m_wake = a_now * idle_f + em.embodied_g_per_node_h * horizon_h
+        mcfp0 = m_dyn + jnp.where(cap0 == ct_f, m_wake, 0.0)
+        lo_m, rcp_m, _ = _lo_rcp(mcfp0)
+        ctx.update(m_dyn=m_dyn, m_wake=m_wake, ct_f=ct_f,
+                   lo_m=lo_m, rcp_m=rcp_m,
+                   w_m=jnp.asarray(em.w_marginal, jnp.float32))
+    return ctx
 
 
-_GATHERED = ("a_now", "a_fc", "inv_total", "static")
+_GATHERED = ("a_now", "a_fc", "inv_total", "static",
+             "m_dyn", "m_wake", "ct_f")
 
 
 def _ctx_scores(cap, ctx, w: RankWeights):
@@ -182,14 +213,24 @@ def _ctx_scores(cap, ctx, w: RankWeights):
     Division-free; the barriers pin rounding before every mul→add seam so a
     length-1 gather computes bit-identically to the full-fleet sweep."""
     bar = jax.lax.optimization_barrier
-    occ = 1.0 - bar(cap.astype(jnp.float32) * ctx["inv_total"])
-    dyn = bar((1.0 - IDLE_POWER_FRAC) * occ)
-    factor = IDLE_POWER_FRAC + dyn
+    capf = cap.astype(jnp.float32)
+    occ = 1.0 - bar(capf * ctx["inv_total"])
+    dyn = bar(ctx["dyn_f"] * occ)
+    factor = ctx["idle_f"] + dyn
     cfp = bar(ctx["a_now"] * factor)
     fcfp = bar(ctx["a_fc"] * factor)
     t1 = bar(w.w1 * ((cfp - ctx["lo_now"]) * ctx["rcp_now"]))
     t2 = bar(w.w2 * ((fcfp - ctx["lo_fc"]) * ctx["rcp_fc"]))
-    return (t1 + t2) + ctx["static"]
+    score = (t1 + t2) + ctx["static"]
+    if "m_dyn" in ctx:
+        # Select-then-add (no FMA contraction possible across the where);
+        # score >= +0.0 always, so `score + 0.0` is bitwise `score` when
+        # the traced weight is zero — the marginal term is bit-neutral.
+        mcfp = ctx["m_dyn"] + jnp.where(capf == ctx["ct_f"],
+                                        ctx["m_wake"], 0.0)
+        score = score + bar(ctx["w_m"] * ((mcfp - ctx["lo_m"])
+                                          * ctx["rcp_m"]))
+    return score
 
 
 def _one_score(cap_b, b, ctx, w: RankWeights):
@@ -202,11 +243,14 @@ def _one_score(cap_b, b, ctx, w: RankWeights):
 
 def place_jobs_full_rerank(fleet: Fleet, demands: jax.Array,
                            weights: RankWeights = RankWeights(),
-                           horizon_h: float = 1.0) -> PlacementResult:
+                           horizon_h: float = 1.0,
+                           energy: Optional[EnergyModel] = None
+                           ) -> PlacementResult:
     """O(J·N) oracle: full fleet rescore + masked argmin per job."""
     J = demands.shape[0]
     return place_lifecycle_full_rerank(
-        fleet, demands, jnp.full((J,), -1, jnp.int32), weights, horizon_h)
+        fleet, demands, jnp.full((J,), -1, jnp.int32), weights, horizon_h,
+        energy=energy)
 
 
 def place_lifecycle_full_rerank(fleet: Fleet, demands: jax.Array,
@@ -214,7 +258,8 @@ def place_lifecycle_full_rerank(fleet: Fleet, demands: jax.Array,
                                 weights: RankWeights = RankWeights(),
                                 horizon_h: float = 1.0, *,
                                 capacity: Optional[jax.Array] = None,
-                                n_events: Optional[jax.Array] = None
+                                n_events: Optional[jax.Array] = None,
+                                energy: Optional[EnergyModel] = None
                                 ) -> PlacementResult:
     """Lifecycle oracle over an event stream, O(arrivals · N).
 
@@ -234,7 +279,7 @@ def place_lifecycle_full_rerank(fleet: Fleet, demands: jax.Array,
     the first ``n_events`` entries — the caller asserts the rest are no-op
     padding, which the loop would skip anyway, so truncation is exact."""
     E = demands.shape[0]
-    ctx = frozen_ctx(fleet, weights, horizon_h)
+    ctx = frozen_ctx(fleet, weights, horizon_h, energy=energy)
     cap0 = fleet.capacity if capacity is None else capacity
     healthy = fleet.healthy
 
@@ -278,13 +323,15 @@ def place_jobs_shortlist(fleet: Fleet, demands: jax.Array,
                          horizon_h: float = 1.0, *,
                          shortlist: int = 32,
                          use_kernel: bool = False,
-                         interpret: Optional[bool] = None
+                         interpret: Optional[bool] = None,
+                         energy: Optional[EnergyModel] = None
                          ) -> PlacementResult:
     """Arrivals-only wrapper over the lifecycle engine (see below)."""
     J = demands.shape[0]
     return place_lifecycle_shortlist(
         fleet, demands, jnp.full((J,), -1, jnp.int32), weights, horizon_h,
-        shortlist=shortlist, use_kernel=use_kernel, interpret=interpret)
+        shortlist=shortlist, use_kernel=use_kernel, interpret=interpret,
+        energy=energy)
 
 
 def place_lifecycle_shortlist(fleet: Fleet, demands: jax.Array,
@@ -296,7 +343,8 @@ def place_lifecycle_shortlist(fleet: Fleet, demands: jax.Array,
                               interpret: Optional[bool] = None,
                               capacity: Optional[jax.Array] = None,
                               n_events: Optional[jax.Array] = None,
-                              eager_sweep: bool = False
+                              eager_sweep: bool = False,
+                              energy: Optional[EnergyModel] = None
                               ) -> PlacementResult:
     """Shortlist-greedy lifecycle placement, bit-identical to the oracle.
 
@@ -342,7 +390,15 @@ def place_lifecycle_shortlist(fleet: Fleet, demands: jax.Array,
     K = min(max(shortlist, 1), N)
     full_cover = K >= N          # shortlist == whole fleet: bound unused
     INF = jnp.float32(jnp.inf)
-    ctx = frozen_ctx(fleet, weights, horizon_h)
+    if use_kernel and (energy is not None or weights.marginal):
+        # The Pallas sweep scores exactly the four historical Eq. 1 terms;
+        # it has no marginal-CFP term and reads the module constants, so a
+        # non-default energy model silently diverging is worse than a hard
+        # error here (callers route marginal runs to the jnp path).
+        raise NotImplementedError(
+            "use_kernel=True does not support a custom EnergyModel or "
+            "weights.marginal != 0; use the jnp scoring path")
+    ctx = frozen_ctx(fleet, weights, horizon_h, energy=energy)
     cap0 = fleet.capacity if capacity is None else capacity
     # health is a HARD feasibility constraint (an outaged node is not a
     # candidate, period — the soft sched-weight penalty only biases);
@@ -519,7 +575,8 @@ def place_lifecycle_batched(fleet: Fleet, demands: jax.Array,
                             horizon_h: float = 1.0, *,
                             engine: str = "shortlist", shortlist: int = 32,
                             capacity: Optional[jax.Array] = None,
-                            n_events: Optional[jax.Array] = None):
+                            n_events: Optional[jax.Array] = None,
+                            energy: Optional[EnergyModel] = None):
     """Arrival-only lifecycle placement over an explicit leading lane axis
     — the batched-ensemble twin of ``place_lifecycle_shortlist`` (with
     ``eager_sweep``) and ``place_lifecycle_full_rerank``.
@@ -561,7 +618,13 @@ def place_lifecycle_batched(fleet: Fleet, demands: jax.Array,
     INF = jnp.float32(jnp.inf)
     lanes = jnp.arange(L)
     karange = jnp.arange(K)
-    ctx = jax.vmap(lambda f: frozen_ctx(f, weights, horizon_h))(fleet)
+    if energy is None:
+        ctx = jax.vmap(lambda f: frozen_ctx(f, weights, horizon_h))(fleet)
+    else:
+        # energy carries (L,)-scalar leaves — one model per ensemble lane
+        ctx = jax.vmap(
+            lambda f, e: frozen_ctx(f, weights, horizon_h, energy=e)
+        )(fleet, energy)
     # (L,) normalizer scalars broadcast against (L, N) score columns
     ctx = {k: (v[:, None] if v.ndim == 1 else v) for k, v in ctx.items()}
     cap0 = fleet.capacity if capacity is None else capacity

@@ -29,9 +29,24 @@ class RankWeights:
     w2: float = 0.25    # FCFP
     w3: float = 0.25    # CP_RATIO (inverted)
     w4: float = 0.15    # SCHEDULE_WEIGHT
+    #: Weight of the *marginal*-CFP term (Eq. 1 variant): dynamic-only
+    #: power for already-on nodes, full two-part cost (idle floor +
+    #: amortized embodied carbon) for powering a node on.  0 keeps the
+    #: historical total-CFP ranking bit-exactly.
+    marginal: float = 0.0
 
     def as_array(self) -> jax.Array:
+        # Kernel contract: the Pallas sweep consumes exactly 4 weights.
         return jnp.array([self.w1, self.w2, self.w3, self.w4], jnp.float32)
+
+    def graph_key(self) -> "RankWeights":
+        """Canonical key for compile-graph bucketing.
+
+        ``marginal`` rides through the graph as traced data (the term is
+        always present and bit-neutral at weight 0), so a marginal-weight
+        calibration grid shares one compiled graph/bucket.
+        """
+        return dataclasses.replace(self, marginal=0.0)
 
 
 def _minmax(x: jax.Array, axis=-1) -> jax.Array:
@@ -48,8 +63,13 @@ def _minmax(x: jax.Array, axis=-1) -> jax.Array:
 def maiz_ranking(cfp: jax.Array, fcfp: jax.Array, cp_ratio: jax.Array,
                  schedule_weight: jax.Array,
                  weights: RankWeights = RankWeights(),
-                 normalize: bool = True) -> jax.Array:
-    """Eq. 1 over a candidate axis (last). Lower score = better node."""
+                 normalize: bool = True,
+                 marginal_cfp: Optional[jax.Array] = None) -> jax.Array:
+    """Eq. 1 over a candidate axis (last). Lower score = better node.
+
+    When ``marginal_cfp`` is given (see :func:`marginal_cfp`), it enters
+    as a fifth min-max-normalized term with weight ``weights.marginal``.
+    """
     if normalize:
         cfp = _minmax(cfp)
         fcfp = _minmax(fcfp)
@@ -58,8 +78,31 @@ def maiz_ranking(cfp: jax.Array, fcfp: jax.Array, cp_ratio: jax.Array,
     else:
         eff = -cp_ratio
         sw = schedule_weight
-    return (weights.w1 * cfp + weights.w2 * fcfp
-            + weights.w3 * eff + weights.w4 * sw)
+    score = (weights.w1 * cfp + weights.w2 * fcfp
+             + weights.w3 * eff + weights.w4 * sw)
+    if marginal_cfp is not None:
+        m = _minmax(marginal_cfp) if normalize else marginal_cfp
+        score = score + weights.marginal * m
+    return score
+
+
+def marginal_cfp(cfp: jax.Array, chips_total: jax.Array, idle_frac,
+                 dyn_frac, is_off: jax.Array, embodied_g_h=0.0,
+                 horizon_h: float = 1.0) -> jax.Array:
+    """*Marginal* CFP — the Eq. 1 variant's raw term (reference form).
+
+    An already-on node is charged only the per-chip *dynamic* share of
+    its CFP (the idle floor is sunk cost); placing onto a powered-off
+    node pays the full two-part price: the idle floor it would switch on
+    plus the amortized embodied carbon of keeping that node alive for
+    the placement horizon.  ``cfp`` is the nameplate carbon footprint
+    (power × h × PUE × CI); ``is_off`` marks nodes that would need
+    powering on.  This is the oracle the placement engines' fused
+    marginal term is tested against.
+    """
+    dyn = cfp * dyn_frac / jnp.maximum(chips_total, 1)
+    wake = cfp * idle_frac + embodied_g_h * horizon_h
+    return dyn + jnp.where(is_off, wake, 0.0)
 
 
 def rank_nodes(scores: jax.Array, valid: Optional[jax.Array] = None

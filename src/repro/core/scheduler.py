@@ -23,6 +23,7 @@ import jax
 import numpy as np
 
 from repro.core import placement
+from repro.core.energy import EnergyModel
 from repro.core.fleet import Fleet
 from repro.core.ranking import RankWeights
 
@@ -131,7 +132,8 @@ def place_jobs(fleet: Fleet, demands: jax.Array,
                weights: RankWeights = RankWeights(),
                horizon_h: float = 1.0, *,
                engine: str = "auto", shortlist: int = 32,
-               use_kernel: bool = False) -> Placement:
+               use_kernel: bool = False,
+               energy: Optional[EnergyModel] = None) -> Placement:
     """Greedy: jobs in given order take the best-ranked node with capacity.
 
     demands: (J,) chips per job.  Capacity is decremented as jobs land and
@@ -157,10 +159,10 @@ def place_jobs(fleet: Fleet, demands: jax.Array,
     if engine == "shortlist":
         r = placement.place_jobs_shortlist(
             fleet, demands, weights, horizon_h, shortlist=shortlist,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, energy=energy)
     elif engine == "full":
         r = placement.place_jobs_full_rerank(fleet, demands, weights,
-                                             horizon_h)
+                                             horizon_h, energy=energy)
     else:
         raise ValueError(f"unknown placement engine: {engine!r}")
     return Placement(node=r.node, scores=r.scores, n_sweeps=r.n_sweeps)
@@ -179,7 +181,8 @@ def place_events(fleet: Fleet, demands: jax.Array, nodes: jax.Array,
                  interpret: Optional[bool] = None,
                  capacity: Optional[jax.Array] = None,
                  n_events: Optional[jax.Array] = None,
-                 eager_sweep: bool = False) -> Placement:
+                 eager_sweep: bool = False,
+                 energy: Optional[EnergyModel] = None) -> Placement:
     """Lifecycle placement over an interleaved event stream.
 
     ``demands[e] > 0`` is an arrival (greedily placed, like ``place_jobs``);
@@ -207,11 +210,11 @@ def place_events(fleet: Fleet, demands: jax.Array, nodes: jax.Array,
         r = placement.place_lifecycle_shortlist(
             fleet, demands, nodes, weights, horizon_h, shortlist=shortlist,
             use_kernel=use_kernel, interpret=interpret, capacity=capacity,
-            n_events=n_events, eager_sweep=eager_sweep)
+            n_events=n_events, eager_sweep=eager_sweep, energy=energy)
     elif engine == "full":
         r = placement.place_lifecycle_full_rerank(
             fleet, demands, nodes, weights, horizon_h, capacity=capacity,
-            n_events=n_events)
+            n_events=n_events, energy=energy)
     else:
         raise ValueError(f"unknown placement engine: {engine!r}")
     return Placement(node=r.node, scores=r.scores, n_sweeps=r.n_sweeps)

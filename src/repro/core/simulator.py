@@ -27,8 +27,9 @@ advances a fleet through T hourly epochs.  Each epoch:
    releases batched ahead of arrivals so the whole epoch costs ~1 rank
    sweep;
 5. accounts emissions: per-node energy from the affine utilization model
-   (``fleet.IDLE_POWER_FRAC``), idle nodes powered off when
-   ``power_off_idle``, migration overhead charged at the source node's CI.
+   (``core.energy.EnergyModel``: idle floor + dynamic power + amortized
+   embodied carbon), idle nodes powered off when ``power_off_idle``,
+   migration overhead charged at the source node's CI.
 
 ``engine="shortlist"`` and ``engine="full"`` produce bit-identical
 trajectories (asserted by the lifecycle parity tests and the
@@ -68,10 +69,10 @@ import numpy as np
 
 from repro.core import forecast, telemetry
 from repro.core import policy as policylib
-from repro.core.carbon import job_energy_kwh
+from repro.core.energy import DEFAULT_ENERGY, EnergyModel
 from repro.core.faults import (FaultConfig, FaultPlan, fault_graph_key,
                                plan_faults)
-from repro.core.fleet import IDLE_POWER_FRAC, Fleet
+from repro.core.fleet import Fleet
 from repro.core.placement import (place_lifecycle_batched,
                                   place_lifecycle_full_rerank,
                                   place_lifecycle_shortlist)
@@ -119,7 +120,22 @@ class SimConfig:
     migration_budget: int = 0       # max policy migrations / epoch
     migration_overhead_h: float = 0.05   # checkpoint+restore wall clock
     # --- power model ---
+    # Two-part energy/carbon model (idle fraction, chip/host watts,
+    # amortized embodied gCO2 per node-hour, marginal-CFP weight storage).
+    # Threaded as TRACED data through both drivers and the placement
+    # engines, so an (idle-frac x embodied x marginal) calibration grid
+    # shares one compiled graph; the default reproduces the historical
+    # constants bit-exactly.
+    energy: EnergyModel = DEFAULT_ENERGY
     power_off_idle: bool = True     # nodes with no jobs draw zero
+    # --- multi-tenant attribution ---
+    # > 0 assigns each job a tenant id in [0, n_tenants) (drawn AFTER all
+    # other job columns, so enabling attribution cannot perturb the
+    # stream) and reports per-tenant emissions: each on-node's gCO2 is
+    # split across resident jobs proportional to occupied chips; the
+    # idle/rounding remainder lands in bin ``n_tenants`` so the bins sum
+    # exactly to the fleet total.
+    n_tenants: int = 0
     # Powered-off nodes get this straggler bonus so the SCHEDULE_WEIGHT
     # term biases toward consolidation: landing on an already-on node only
     # adds dynamic power, while waking an off node pays the idle floor too.
@@ -162,6 +178,7 @@ class JobSchedule:
     deferrable: np.ndarray  # (J,) bool
     deadline: Optional[np.ndarray] = None   # (J,) start slack in epochs
     value: Optional[np.ndarray] = None      # (J,) f32 job value
+    tenant: Optional[np.ndarray] = None     # (J,) tenant id (attribution)
 
     @property
     def n(self) -> int:
@@ -199,11 +216,16 @@ def generate_jobs(cfg: SimConfig) -> JobSchedule:
                  if cfg.policy.deadline_hi > 0 else cfg.defer_max_h, lo)
         deadline = rng.integers(lo, hi + 1, J)
         value = rng.exponential(1.0, J).astype(np.float32)
+    # tenant ids draw LAST (after reactive AND SLO columns) so turning on
+    # attribution perturbs neither stream — same invariant as the SLO draw
+    tenant = None
+    if cfg.n_tenants > 0:
+        tenant = rng.integers(0, cfg.n_tenants, J).astype(np.int32)
     return JobSchedule(arrive=arrive, chips=chips.astype(np.int64),
                        duration=duration.astype(np.int64),
                        load=chips.astype(np.float64),
                        deferrable=deferrable, deadline=deadline,
-                       value=value)
+                       value=value, tenant=tenant)
 
 
 @dataclasses.dataclass
@@ -228,6 +250,10 @@ class SimResult:
     start_epoch: Optional[np.ndarray] = None  # (J,) first-placement epoch
     util: Optional[np.ndarray] = None   # (N, T) when record_matrices
     on: Optional[np.ndarray] = None
+    # (n_tenants + 1,) gCO2 per tenant when cfg.n_tenants > 0; the last
+    # bin is the unattributed idle/overhead remainder.  Bins sum exactly
+    # to emissions_g (conservation by construction).
+    tenant_emissions_g: Optional[np.ndarray] = None
 
 
 # ---------------------------------------------------------------------------
@@ -237,7 +263,7 @@ class SimResult:
 
 def _place_epoch(pue, power_kw, chips_total, straggler, flops_per_j,
                  ci_now, ci_fc, cap_ctx, cap_start, healthy, demands, nodes,
-                 statics, n_events=None, eager_sweep=False):
+                 statics, n_events=None, eager_sweep=False, energy=None):
     """Build the epoch Fleet and run the lifecycle placement engine.
 
     ``cap_ctx`` is the capacity snapshot the frozen normalizers see;
@@ -256,20 +282,21 @@ def _place_epoch(pue, power_kw, chips_total, straggler, flops_per_j,
     if engine == "full":
         r = place_lifecycle_full_rerank(fleet, demands, nodes, weights,
                                         horizon_h=1.0, capacity=cap_start,
-                                        n_events=n_events)
+                                        n_events=n_events, energy=energy)
     else:
         r = place_lifecycle_shortlist(fleet, demands, nodes, weights,
                                       horizon_h=1.0, shortlist=shortlist,
                                       use_kernel=use_kernel,
                                       capacity=cap_start,
                                       n_events=n_events,
-                                      eager_sweep=eager_sweep)
+                                      eager_sweep=eager_sweep,
+                                      energy=energy)
     return r.node, r.capacity, r.n_sweeps
 
 
 def _epoch_core(traces, ridx, pue, power_kw, chips_total, straggler,
                 flops_per_j, region_pue, t, cap, healthy, demands, nodes,
-                fc_ok, statics):
+                fc_ok, statics, energy=None):
     """One simulator epoch on-device: slice the CI column, refresh the FCFP
     forecast, build the Fleet and run the lifecycle placement engine.
     ``straggler`` already carries the per-epoch consolidation bonus.
@@ -313,7 +340,7 @@ def _epoch_core(traces, ridx, pue, power_kw, chips_total, straggler,
         fut_rate = jnp.float32(jnp.inf)
     node, cap_out, n_sweeps = _place_epoch(
         pue, power_kw, chips_total, straggler, flops_per_j, ci_now, ci_fc,
-        cap, cap, healthy, demands, nodes, statics)
+        cap, cap, healthy, demands, nodes, statics, energy=energy)
     cur_rate = jnp.min(jnp.where(healthy, ci_now * pue, jnp.inf))
     return node, cap_out, n_sweeps, ci_now, cur_rate, fut_rate
 
@@ -456,11 +483,32 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
     on_m = np.zeros((N, T)) if record_matrices else None
 
     fc_fallback = (fplan is not None and cfg.use_forecast and not blind)
-    statics = (cfg.engine, cfg.shortlist, cfg.use_kernel, cfg.weights,
+    # weights enter the compiled graph through their canonical graph_key
+    # (marginal pinned to 0): the live marginal weight rides as traced
+    # data inside the EnergyModel, so a marginal-weight sweep shares one
+    # compile.  The kernel path scores without the marginal term and with
+    # the module constants — reject combinations it cannot honor.
+    em_host = cfg.energy
+    if cfg.use_kernel and (cfg.weights.marginal != 0.0
+                           or em_host != DEFAULT_ENERGY):
+        raise NotImplementedError(
+            "use_kernel=True supports only the default EnergyModel with "
+            "weights.marginal == 0 (the Pallas sweep scores the four "
+            "historical Eq. 1 terms with baked-in constants)")
+    em_dev = None if cfg.use_kernel \
+        else em_host.device(w_marginal=cfg.weights.marginal)
+    statics = (cfg.engine, cfg.shortlist, cfg.use_kernel,
+               cfg.weights.graph_key(),
                cfg.horizon_h, cfg.history_h,
                cfg.use_forecast and not blind,
                pol.defer_window(cfg.defer_max_h), fc_fallback)
     overhead_s = cfg.migration_overhead_h * 3600.0
+    n_ten = int(cfg.n_tenants)
+    if n_ten and jobs.tenant is None:
+        raise ValueError("cfg.n_tenants > 0 requires jobs.tenant "
+                         "(generate_jobs draws it when n_tenants is set)")
+    ten = None if not n_ten else np.asarray(jobs.tenant, np.int64)
+    tenant_g = np.zeros(n_ten + 1) if n_ten else None
     if planner:
         fc_ok_d = jnp.asarray(fplan.fc_ok) if fplan is not None \
             else jnp.ones(T, bool)
@@ -508,7 +556,7 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
                 feas = rate[free >= c]
                 best_rate[int(c)] = float(feas.min()) if feas.size else np.inf
             # per-chip-hour energy of a job (kWh): chips · board+host power
-            e_kwh_h = job_energy_kwh(3600.0, 1, 1)  # per chip per hour
+            e_kwh_h = em_host.e_kwh_h       # per chip per hour
             chips_arr = jobs.chips[stay]
             br_arr = np.array([best_rate[int(c)] for c in chips_arr]) \
                 if stay.size else np.empty(0)
@@ -524,7 +572,8 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
                 chips=chips_arr,
                 remaining=np.maximum(jend[stay] - t, 0),
                 e_kwh_h=float(e_kwh_h),
-                ckpt=np.asarray(job_energy_kwh(overhead_s, 1, chips_arr)),
+                ckpt=np.asarray(em_host.job_energy_kwh(overhead_s, 1,
+                                                       chips_arr)),
                 **la_kw)
             if mig_block and stay.size:
                 # retry-with-backoff: a job whose last actuation failed is
@@ -558,9 +607,12 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
             njobs[jnode[j]] -= 1
             load_on[jnode[j]] -= jobs.load[j]
             if j in mig:
-                mig_cost_total += (
-                    float(job_energy_kwh(overhead_s, 1, int(jobs.chips[j])))
-                    * pue_h[jnode[j]] * ci_col[jnode[j]])
+                mc = (float(em_host.job_energy_kwh(overhead_s, 1,
+                                                   int(jobs.chips[j])))
+                      * pue_h[jnode[j]] * ci_col[jnode[j]])
+                mig_cost_total += mc
+                if n_ten:       # overhead belongs to the moving tenant
+                    tenant_g[ten[j]] += mc
 
         # ---- 3. new arrivals (+ deferral policy) --------------------
         arr_jobs = (slo_queue if slo else deferred.pop(t, [])) \
@@ -596,7 +648,7 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
                 fleet0.chips_total, strag,
                 fleet0.flops_per_j, region_pue_d, jnp.int32(a), cap,
                 jnp.asarray(healthy), jnp.asarray(dem), jnp.asarray(tgt),
-                jnp.asarray(fc_ok_t), statics)
+                jnp.asarray(fc_ok_t), statics, em_dev)
             out = np.asarray(out)
             cap_h = np.asarray(cap, np.int64)
             sweeps += int(n_sw)
@@ -691,7 +743,7 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
                     fleet0.chips_total, strag,
                     fleet0.flops_per_j, region_pue_d, jnp.int32(a), cap,
                     jnp.asarray(healthy), jnp.asarray(d2), jnp.asarray(n2),
-                    jnp.asarray(fc_ok_t), statics)
+                    jnp.asarray(fc_ok_t), statics, em_dev)
                 cap_h = np.asarray(cap, np.int64)
 
         # ---- 5. emission accounting ---------------------------------
@@ -699,10 +751,25 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
         on = (njobs > 0) if cfg.power_off_idle and not spread \
             else np.ones(N, bool)
         occ = 1.0 - cap_h / np.maximum(chips_total_h, 1)
-        energy_kwh = power_h * (IDLE_POWER_FRAC
-                                + (1.0 - IDLE_POWER_FRAC) * occ) * on
-        series[t] = float(np.sum(energy_kwh * pue_h * ci_col))
+        energy_kwh = power_h * (em_host.idle_frac
+                                + em_host.dyn_frac * occ) * on
+        # two-part carbon: operational (Eq. 2) + amortized embodied per
+        # on-node-hour; embodied == 0.0 adds exact zeros (bit-neutral)
+        node_g = (energy_kwh * pue_h * ci_col
+                  + em_host.embodied_g_per_node_h * on)
+        series[t] = float(np.sum(node_g))
         emissions += series[t]
+        if n_ten:
+            # split each on-node's gCO2 across resident jobs proportional
+            # to occupied chips; idle/rounding remainder -> last bin, so
+            # the bins sum to series[t] exactly (conservation)
+            act = np.where(jstate == _ACTIVE)[0]
+            occ_chips = np.zeros(N)
+            np.add.at(occ_chips, jnode[act], jobs.chips[act])
+            share = node_g / np.maximum(occ_chips, 1.0)
+            contrib = share[jnode[act]] * jobs.chips[act]
+            np.add.at(tenant_g, ten[act], contrib)
+            tenant_g[-1] += series[t] - float(contrib.sum())
         if record_matrices:
             util_m[:, t] = load_on
             on_m[:, t] = on.astype(np.float64)
@@ -728,7 +795,8 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
                      jobs_active_end=int((jstate == _ACTIVE).sum()),
                      safe_epochs=int(fplan.safe.sum())
                      if fplan is not None else 0,
-                     start_epoch=jstart, util=util_m, on=on_m)
+                     start_epoch=jstart, util=util_m, on=on_m,
+                     tenant_emissions_g=tenant_g)
 
 
 def _place_blind(dem: np.ndarray, tgt: np.ndarray, cap: np.ndarray,
@@ -880,7 +948,7 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
       static pue order, so a cummax of free capacity along that order plus
       a searchsorted replaces a fleet-wide scatter-min."""
     (T, S, a_max, d_cap, rel_cap, m_evict, budget, chips_max, history_h,
-     defer_max_h, outage, power_off_idle, consolidate, overhead_h,
+     defer_max_h, outage, power_off_idle, consolidate, n_ten,
      pcfg, fkey) = dims
     faulty, fault_mig, fault_flap = fkey     # faults.fault_graph_key
     N = arrs["capacity"].shape[-1]
@@ -900,10 +968,12 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
     EV = m_cap + n_narr         # padded event-buffer width
     INT_MAX = jnp.int32(2 ** 31 - 1)
     arange_s = jnp.arange(S, dtype=jnp.int32)
-    # f32 mirrors of the host's f64 job_energy_kwh constants (linear in
-    # chips: watts = chips * (CHIP + HOST/8))
-    e_kwh_h = jnp.float32(float(job_energy_kwh(3600.0, 1, 1)))
-    ckpt_kwh = jnp.float32(float(job_energy_kwh(overhead_h * 3600.0, 1, 1)))
+    # the per-run EnergyModel rides through ``arrs`` as traced f32 data
+    # (``en_*`` scalars, lowered host-side by ``_build_arrs``) — an
+    # (idle-frac x embodied x marginal) calibration grid shares this one
+    # compiled trajectory.  The kernel path keeps its baked constants, so
+    # it scores with energy=None (guarded in ``_prepare_scan_run``).
+    use_kernel = statics[2]
     if slo:
         arange_e = jnp.arange(n_narr, dtype=jnp.int32)
         # effective queue capacity: a traced per-run scalar <= the static
@@ -1063,8 +1133,8 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
                     dst_la=x["la_dst"], gw_min=x["gw_min"])
             gain = policylib.migration_gain(
                 jnp, pcfg, rate_cur=rate_cur, best_rate=br, chips=chips_f,
-                remaining=remaining, e_kwh_h=e_kwh_h,
-                ckpt=ckpt_kwh * chips_f,
+                remaining=remaining, e_kwh_h=arrs["en_ekwh"],
+                ckpt=arrs["en_ckpt"] * chips_f,
                 green_gate=arrs["green_gate"], **la_kw)
             if fault_mig:
                 # retry-with-backoff: slots whose last actuation failed
@@ -1101,10 +1171,13 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
             migrations_t = jnp.sum(mig_ok.astype(jnp.int32))
             mnode = jnp.clip(slot_node[mig_slot], 0, N - 1)
             mchip = chips_d[jnp.maximum(slot_jid[mig_slot], 0)]
-            mig_cost_t = jnp.sum(jnp.where(
+            # per-mover overhead cost kept as a vector so attribution can
+            # charge each migration to its mover's tenant
+            mc_vec = jnp.where(
                 mig_ok,
-                ckpt_kwh * mchip.astype(jnp.float32)
-                * pue[mnode] * ci_true[mnode], 0.0))
+                arrs["en_ckpt"] * mchip.astype(jnp.float32)
+                * pue[mnode] * ci_true[mnode], 0.0)
+            mig_cost_t = jnp.sum(mc_vec)
             seg_slot.append(mig_slot)
             seg_ok.append(mig_ok)
         if m_cap > 0:
@@ -1155,6 +1228,12 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
                    migrations_t=migrations_t, mig_cost_t=mig_cost_t,
                    mig_cost=mig_cost, overflow=overflow,
                    ci_true=ci_true, failed_t=failed_t)
+        if budget > 0 and n_ten > 0:
+            # mover tenants read pre-update slot_jid (still valid here);
+            # mc_vec is zero for non-winning lanes so junk indices are
+            # harmless under mode="drop" scatter-adds
+            mid.update(mc_vec=mc_vec, mig_ten=arrs["tenant"][
+                jnp.maximum(slot_jid[mig_slot], 0)])
         if fault_mig:
             mid.update(mig_until=mig_until, mig_nfail=mig_nfail)
         return mid
@@ -1279,13 +1358,43 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
 
         # ---- 5. emission accounting ----------------------------------
         # always at the TRUE carbon intensity — faults degrade what the
-        # policies see, not what the grid actually emitted
+        # policies see, not what the grid actually emitted.  The operating
+        # charge and the amortized embodied charge both gate on ``on``;
+        # with the default model's embodied == 0 the added term is an
+        # exact elementwise +0.0, so e_t stays bitwise historical.
         on = (njobs > 0) if power_off_idle else jnp.ones((N,), bool)
         occ = 1.0 - cap2.astype(jnp.float32) \
             / jnp.maximum(chips_total.astype(jnp.float32), 1.0)
-        energy = power_kw * (IDLE_POWER_FRAC
-                             + (1.0 - IDLE_POWER_FRAC) * occ) * on
-        e_t = jnp.sum(energy * pue * mid["ci_true"])
+        energy = power_kw * (arrs["en_idle"]
+                             + arrs["en_dyn"] * occ) * on
+        node_g = energy * pue * mid["ci_true"] \
+            + arrs["en_embodied"] * on
+        e_t = jnp.sum(node_g)
+        if n_ten > 0:
+            # per-tenant attribution from the POST-update slot tables:
+            # each on-node's gCO2 is split across its resident jobs
+            # proportionally to occupied chips; the idle/rounding
+            # remainder lands in the extra bin n_ten (conservation by
+            # construction, same split as the host loop's np.add.at)
+            occ3 = slot_jid >= 0
+            s_jid = jnp.maximum(slot_jid, 0)
+            s_chips = jnp.where(
+                occ3, arrs["chips"][s_jid], 0).astype(jnp.float32)
+            occ_chips = jnp.zeros((N,), jnp.float32).at[
+                jnp.where(occ3, slot_node, N)].add(s_chips, mode="drop")
+            share = node_g / jnp.maximum(occ_chips, 1.0)
+            contrib = jnp.where(
+                occ3, share[jnp.clip(slot_node, 0, N - 1)] * s_chips, 0.0)
+            ten_t = jnp.zeros((n_ten + 1,), jnp.float32).at[
+                jnp.where(occ3, arrs["tenant"][s_jid], n_ten)].add(
+                contrib, mode="drop")
+            ten_t = ten_t.at[n_ten].add(e_t - jnp.sum(contrib))
+            if budget > 0:
+                # migration overhead is charged to the mover's tenant
+                ten_t = ten_t.at[mid["mig_ten"]].add(
+                    mid["mc_vec"], mode="drop")
+        else:
+            ten_t = jnp.zeros((1,), jnp.float32)
 
         carry = (cap2, njobs, slot_jid, slot_node, slot_end, defer_ids,
                  mid["mig_cost"] + mid["mig_cost_t"], overflow)
@@ -1299,8 +1408,17 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
               mov_jid, ys_mov_node,
               jnp.where(place_new, narr_jid, -1),
               jnp.where(place_new, nnode, -1),
-              overflow, mid["failed_t"])
+              overflow, mid["failed_t"], ten_t)
         return carry, ys
+
+    # traced EnergyModel twin for the placement engines ((L,) leaves in
+    # the ensemble — the batched ctx builder vmaps over them); the Pallas
+    # kernel scores with its baked constants, so it gets None
+    em_tr = None if use_kernel else EnergyModel(
+        idle_frac=arrs["en_idle"], chip_power_w=arrs["en_chipw"],
+        host_power_w=arrs["en_hostw"],
+        embodied_g_per_node_h=arrs["en_embodied"],
+        w_marginal=arrs["en_wmarg"], dyn_frac=arrs["en_dyn"])
 
     if not ensemble:
         xs = build_xs(arrs)
@@ -1313,7 +1431,7 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
                 mid["strag"], arrs["flops_per_j"], mid["ci_col"],
                 mid["ci_fc"], mid["cap_ctx"], mid["cap_start"],
                 mid["healthy"], mid["dem"], tgt, statics,
-                n_events=mid["n_ev"], eager_sweep=True)
+                n_events=mid["n_ev"], eager_sweep=True, energy=em_tr)
             return epoch_post(arrs, mid, out_c, cap2, n_sw)
 
         init = (arrs["capacity"], jnp.zeros((N,), jnp.int32),
@@ -1346,7 +1464,7 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
         out_c, cap2, n_sw = place_lifecycle_batched(
             fleet, mid["dem"], weights, horizon_h=1.0, engine=engine,
             shortlist=shortlist, capacity=mid["cap_start"],
-            n_events=mid["n_ev"])
+            n_events=mid["n_ev"], energy=em_tr)
         return vpost(arrs, mid, out_c, cap2, n_sw)
 
     init = (arrs["capacity"], jnp.zeros((L, N), jnp.int32),
@@ -1406,12 +1524,25 @@ def _prepare_scan_run(fleet0: Fleet, region_ci: np.ndarray,
         raise ValueError(
             f"scanned core supports engine='shortlist'|'full', got "
             f"{cfg.engine!r} (blind/spread comparators are host-only)")
+    if cfg.use_kernel and (cfg.weights.marginal != 0.0
+                           or cfg.energy != DEFAULT_ENERGY):
+        raise NotImplementedError(
+            "the Pallas kernel scores with baked default-energy constants; "
+            "use_kernel=False is required for a custom EnergyModel or a "
+            "nonzero RankWeights.marginal")
     jobs = jobs if jobs is not None else generate_jobs(cfg)
+    if cfg.n_tenants and jobs.tenant is None:
+        raise ValueError("SimConfig.n_tenants > 0 requires a JobSchedule "
+                         "with a tenant column (generate_jobs draws one)")
     pol = Policy.for_jobs(cfg.policy, jobs.arrive, jobs.deferrable,
                           cfg.defer_max_h, jobs.deadline, jobs.value)
     plan = _scan_plan(cfg, jobs, pol, pad=pad_plan)
     fc_fallback = cfg.faults is not None and cfg.use_forecast
-    statics = (cfg.engine, cfg.shortlist, cfg.use_kernel, cfg.weights,
+    # weights enter the statics via graph_key(): the live marginal weight
+    # rides as traced data (arrs["en_wmarg"]), so a marginal-weight grid
+    # shares one compiled trajectory
+    statics = (cfg.engine, cfg.shortlist, cfg.use_kernel,
+               cfg.weights.graph_key(),
                cfg.horizon_h, cfg.history_h, cfg.use_forecast,
                pol.defer_window(cfg.defer_max_h), fc_fallback)
     fplan = None
@@ -1439,7 +1570,7 @@ def _bucket_key(run: _ScanRun) -> tuple:
             cfg.migration_budget, cfg.defer_max_h,
             _outage_windows(cfg.outage),
             cfg.power_off_idle, float(cfg.consolidate),
-            float(cfg.migration_overhead_h), cfg.policy.graph_key(),
+            cfg.n_tenants > 0, cfg.policy.graph_key(),
             fault_graph_key(cfg.faults))
 
 
@@ -1463,7 +1594,8 @@ def _shared_dims(runs, pad: bool):
             max(int(np.max(r.jobs.chips, initial=1)) for r in runs),
             cfg.history_h, cfg.defer_max_h, outs,
             cfg.power_off_idle, float(cfg.consolidate),
-            float(cfg.migration_overhead_h), cfg.policy.graph_key(), fkey)
+            max(r.cfg.n_tenants for r in runs),
+            cfg.policy.graph_key(), fkey)
     jp = max((_pad_bucket(max(r.jobs.n, 1)) if pad else max(r.jobs.n, 1))
              for r in runs)
     return dims, jp, max(r.mig_nmax for r in runs)
@@ -1524,6 +1656,23 @@ def _build_arrs(run: _ScanRun, dims: tuple, jp: int, mig_nmax: int):
         green_factor=jnp.float32(cfg.policy.defer_green_factor),
         green_gate=jnp.float32(cfg.policy.green_gate),
     )
+    # the EnergyModel, lowered to traced f32 scalars host-side — bitwise
+    # the constants the scan core used to inline (en_ekwh/en_ckpt go
+    # through the identical f64 op order before the single f32 round)
+    em = cfg.energy
+    arrs.update(
+        en_idle=jnp.float32(em.idle_frac),
+        en_dyn=jnp.float32(em.dyn_frac),
+        en_chipw=jnp.float32(em.chip_power_w),
+        en_hostw=jnp.float32(em.host_power_w),
+        en_embodied=jnp.float32(em.embodied_g_per_node_h),
+        en_wmarg=jnp.float32(cfg.weights.marginal),
+        en_ekwh=jnp.float32(em.e_kwh_h),
+        en_ckpt=jnp.float32(em.ckpt_kwh(cfg.migration_overhead_h)))
+    if dims[13] > 0:
+        ten = jobs.tenant if jobs.tenant is not None \
+            else np.zeros(J, np.int32)
+        arrs["tenant"] = jconst(ten, 0, np.int32)
     if run.fplan is not None:
         fp = run.fplan
         # decisions read the degraded observed trace; the true trace rides
@@ -1556,7 +1705,7 @@ def _scan_result(run: _ScanRun, carry, ys) -> SimResult:
     defer_f, mig_cost_f, overflow_f = carry[5], carry[6], carry[7]
     (e_t, n_sw, completed_t, dropped_t, placed_t, deferred_t, mig_t,
      evi_t, miss_t, mov_jid, mov_node, new_jid, new_node, ov_t,
-     failed_t) = [np.asarray(y) for y in ys]
+     failed_t, ten_t) = [np.asarray(y) for y in ys]
     if int(overflow_f) != 0:
         bad = int(np.argmax(ov_t > 0))   # first epoch whose cumulative
         raise RuntimeError(              # overflow count is nonzero
@@ -1598,6 +1747,14 @@ def _scan_result(run: _ScanRun, carry, ys) -> SimResult:
     still_q = int((np.asarray(defer_f) >= 0).sum())
     dropped = int(dropped_t.sum()) + still_q
     mig_cost = float(mig_cost_f)
+    tenant_g = None
+    n_run = run.cfg.n_tenants
+    if n_run:
+        # per-epoch f32 bins, summed on host in f64; the shared buffer may
+        # be wider than this member's tenant count — its extra bins are
+        # structurally zero, and the idle/remainder bin sits last
+        tg = ten_t.astype(np.float64).sum(axis=0)
+        tenant_g = np.concatenate([tg[:n_run], tg[-1:]])
     return SimResult(
         emissions_g=float(series.sum()) + mig_cost,
         migration_cost_g=mig_cost,
@@ -1616,7 +1773,8 @@ def _scan_result(run: _ScanRun, carry, ys) -> SimResult:
         jobs_active_end=int((np.asarray(carry[2]) >= 0).sum()),
         safe_epochs=int(run.fplan.safe.sum())
         if run.fplan is not None else 0,
-        start_epoch=start_epoch)
+        start_epoch=start_epoch,
+        tenant_emissions_g=tenant_g)
 
 
 def simulate_fleet_scan(fleet0: Fleet, region_ci: np.ndarray,
@@ -1773,7 +1931,8 @@ def synthetic_lifecycle_fleet(n: int, cfg: SimConfig,
         pue=jnp.asarray(np.array([r.pue for r in regions])[ridx],
                         jnp.float32),
         power_kw=jnp.asarray(
-            chips_per_node * 0.25 * (1 + 0.1 * rng.random(n)), jnp.float32),
+            chips_per_node * cfg.energy.chip_kw
+            * (1 + 0.1 * rng.random(n)), jnp.float32),
         capacity=jnp.full((n,), chips_per_node, jnp.int32),
         healthy=jnp.ones((n,), bool),
         straggler_score=jnp.asarray(

@@ -351,7 +351,7 @@ def test_slot_overflow_error_reports_capacity_epoch_and_override():
 
     T = BASE.epochs
     carry = [None] * 5 + [0.0, 0.0, np.int32(2)]
-    ys = [np.zeros(T, np.int64) for _ in range(15)]
+    ys = [np.zeros(T, np.int64) for _ in range(16)]
     ys[13] = np.asarray([0] * 5 + [1] * (T - 5))   # cumulative overflow
     with pytest.raises(RuntimeError) as e:
         _scan_result(_Run(), carry, ys)
