@@ -21,6 +21,9 @@ Usage (one call per artifact kind):
     python benchmarks/check_regression.py --kind energy \
         --current BENCH_energy.json \
         --baseline benchmarks/baselines/BENCH_energy_smoke.json
+    python benchmarks/check_regression.py --kind serving \
+        --current BENCH_serving.json \
+        --baseline benchmarks/baselines/BENCH_serving_smoke.json
 
 Gates (exit 1 on any):
 - **parity breaks**: any parity flag false in the current artifact
@@ -55,6 +58,13 @@ Gates (exit 1 on any):
   splitting into multiple compiled buckets, or the marginal-CFP ranking
   emitting more than the reactive total-CFP ranking — machine-independent
   flags, gated at smoke scale too;
+- **serving regressions** (``--kind serving``): host-vs-scan request
+  counters/digest parity lost, zero-QPS traffic no longer a bitwise
+  no-op, per-tenant request attribution breaking conservation, the
+  (SLO x greenness) grid splitting into multiple compiled buckets, the
+  carbon-vs-p99 frontier dropping below 5 points or going non-monotone,
+  or the probe placement digest drifting from the committed baseline —
+  machine-independent flags, gated at smoke scale too;
 - **runtime regressions**: any matched runtime metric slower than baseline
   by more than ``--runtime-tol`` (default 1.5x).  Baselines carry numbers
   from the machine class that produced them; regenerate them (rerun the
@@ -301,6 +311,49 @@ def check_energy(base: dict, cur: dict, t: Table, tol: float) -> None:
                       c.get("ens_s"), tol)
 
 
+def check_serving(base: dict, cur: dict, t: Table, tol: float) -> None:
+    """Serving-layer gates (BENCH_serving.json, see repro.core.traffic
+    and repro.core.router): host-vs-scan request parity, the zero-QPS
+    bitwise no-op, tenant request-attribution conservation and the
+    one-compiled-bucket guarantee are hard flags; the carbon-vs-p99
+    Pareto frontier must keep >= 5 points and stay monotone; and the
+    probe placement digest — computed on a fixed env-independent
+    config — must match the committed baseline bitwise (router changes
+    must never feed back into placement).  All machine-independent, so
+    they gate at smoke scale too; the saving delta + runtime ratio
+    compare against the committed baseline."""
+    for key, b, c in _match(base, cur):
+        tag = f"n={key[0]}/t={key[1]}"
+        t.check_flag(f"{tag} host-vs-scan request parity",
+                     c.get("parity", {}).get("bitwise"))
+        t.check_flag(f"{tag} zero-QPS bitwise no-op",
+                     c.get("parity", {}).get("zero_qps_noop"))
+        t.check_flag(f"{tag} tenant request attribution conserved",
+                     c.get("parity", {}).get("tenant_ok"))
+        t.check_flag(f"{tag} grid one compiled bucket",
+                     c.get("one_bucket"))
+        t.check_flag(f"{tag} frontier monotone",
+                     c.get("frontier_monotone"))
+        pts = c.get("frontier_points")
+        t.add(f"{tag} frontier points", ">=5", pts,
+              OK if (pts or 0) >= 5 else FAIL,
+              "carbon-vs-p99 Pareto frontier")
+        bd, cd = b.get("placement_digest"), c.get("placement_digest")
+        if bd is None or cd is None:
+            t.add(f"{tag} placement digest", bd, cd, SKIP,
+                  "missing on one side")
+        else:
+            t.add(f"{tag} placement digest", bd, cd,
+                  OK if bd == cd else FAIL,
+                  "" if bd == cd else "probe trajectory drifted")
+        t.check_delta(f"{tag} greenness saving pct",
+                      b.get("greenness_saving_pct"),
+                      c.get("greenness_saving_pct"),
+                      slack=2.0, higher_is_better=True)
+        t.check_ratio(f"{tag} ensemble s", b.get("ens_s"),
+                      c.get("ens_s"), tol)
+
+
 def check_ensemble(base: dict, cur: dict, t: Table, tol: float) -> None:
     """Batched-ensemble gates (the ``ensemble`` block bench_policy
     records): per-trajectory parity with the sequential scan is a hard
@@ -345,7 +398,7 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--kind",
                     choices=("sim", "placement", "policy", "ensemble",
-                             "robustness", "energy"),
+                             "robustness", "energy", "serving"),
                     required=True)
     ap.add_argument("--current", required=True)
     ap.add_argument("--baseline", required=True)
@@ -372,6 +425,8 @@ def main() -> int:
             check_robustness(base, cur, t, args.runtime_tol)
         elif args.kind == "energy":
             check_energy(base, cur, t, args.runtime_tol)
+        elif args.kind == "serving":
+            check_serving(base, cur, t, args.runtime_tol)
         else:
             check_sim(base, cur, t, args.runtime_tol)
         if not t.rows:

@@ -1003,6 +1003,217 @@ def bench_energy():
             f"scale: best {best['saving_vs_reactive_pct']:+.3f}%")
 
 
+def bench_serving():
+    """Sub-epoch request-routing study (see repro.core.traffic and
+    repro.core.router):
+
+    - **parity hard-gate** — on a fixed saturated probe fleet the f64
+      host loop and the f32 scanned core must agree BIT-EXACTLY on
+      request counters, p99 violations and the placement digest, with
+      the float request-carbon within the emissions tolerance; a
+      zero-QPS traffic layer must leave the placement trajectory
+      bitwise identical to ``traffic=None`` (the digest is recorded so
+      check_regression can catch cross-run drift), and per-tenant
+      request attribution must conserve the serving total on both
+      drivers;
+    - **one-bucket gate** — the (latency-SLO x router-greenness) grid
+      must hash to ONE compiled ensemble bucket: the M/M/c rate caps
+      and the blend knob ride as traced data, only the service count
+      shapes the graph (``traffic_graph_key``);
+    - **carbon-vs-p99 Pareto frontier** — the grid runs as one batched
+      ensemble; per-cell records aggregate (``pareto_frontier``) into
+      the non-dominated gCO2-per-request vs modeled-p99 frontier
+      (>= 5 points, monotone), and at fixed SLO the greenness knob
+      must trade carbon down monotonically — the router's reason to
+      exist.
+
+    The fleet is deliberately saturated (~75% chip occupancy): a
+    mostly-idle fleet concentrates every replica of a service on one
+    carbon class and the blend has nothing to redistribute.
+
+    Env knobs: SERVE_NS / SERVE_EPOCHS / SERVE_QPS / SERVE_SEEDS
+    (defaults 96 / 168 / 20000 / 1,2,3; CI smoke shrinks the first
+    two and runs one seed).  Emits BENCH_serving.json; exits nonzero
+    — at ANY scale — on a parity/no-op/conservation break, a bucket
+    split, or a degenerate (< 5 points) or non-monotone frontier."""
+    import hashlib
+    from repro.core.simulator import (SimConfig, _bucket_key,
+                                      _prepare_scan_run, generate_jobs,
+                                      pareto_frontier, simulate_fleet,
+                                      simulate_fleet_ensemble,
+                                      simulate_fleet_scan,
+                                      synthetic_lifecycle_fleet)
+    from repro.core.traffic import TrafficConfig
+    n = int(os.environ.get("SERVE_NS", "96"))
+    epochs = int(os.environ.get("SERVE_EPOCHS", "168"))
+    qps = float(os.environ.get("SERVE_QPS", "20000"))
+    seeds = tuple(int(x) for x in
+                  os.environ.get("SERVE_SEEDS", "1,2,3").split(","))
+    gate_scale = n >= 96 and epochs >= 168
+
+    def digest(r):
+        return hashlib.sha256(np.concatenate(
+            [r.node_log, r.first_node]).tobytes()).hexdigest()[:16]
+
+    def policy(cfg, slo, g):
+        return dataclasses.replace(cfg, policy=dataclasses.replace(
+            cfg.policy, router_slo_s=slo, router_greenness=g))
+
+    # --- parity hard-gate on a FIXED probe (env-independent, so the
+    # digest is a cross-run invariant the regression gate can compare) --
+    pcfg = SimConfig(epochs=24, seed=3, arrival_rate=16.0,
+                     mean_duration_h=10.0, shortlist=16, history_h=48,
+                     horizon_h=8, chips_lo=8, chips_hi=32, n_tenants=3)
+    ptc = TrafficConfig(req_rate=20000.0, n_svc=4, flash_rate=0.05,
+                        mu_per_chip=0.1)
+    pf, ptr, pri = synthetic_lifecycle_fleet(48, pcfg, chips_per_node=64)
+    loud = policy(dataclasses.replace(pcfg, traffic=ptc), 12.0, 0.75)
+    # serving columns draw LAST in generate_jobs, so these jobs carry
+    # the same placement-relevant columns a traffic-free draw would
+    pjobs = generate_jobs(loud)
+    base_h = simulate_fleet(pf, ptr, pri, pcfg, jobs=pjobs)
+    h = simulate_fleet(pf, ptr, pri, loud, jobs=pjobs)
+    s = simulate_fleet_scan(pf, ptr, pri, loud, jobs=pjobs)
+    rel = abs(s.req_gco2 / max(h.req_gco2, 1e-9) - 1.0)
+    bitwise = bool(
+        h.req_served == s.req_served > 0
+        and h.req_offered == s.req_offered
+        and h.p99_violations == s.p99_violations
+        and digest(h) == digest(s) == digest(base_h) and rel < 1e-4)
+    zcfg = dataclasses.replace(
+        pcfg, traffic=dataclasses.replace(ptc, req_rate=0.0))
+    zh = simulate_fleet(pf, ptr, pri, zcfg, jobs=pjobs)
+    zs = simulate_fleet_scan(pf, ptr, pri, zcfg, jobs=pjobs)
+    zero_noop = bool(digest(zh) == digest(zs) == digest(base_h)
+                     and zh.req_served == zh.req_offered == 0
+                     and zh.req_gco2 == 0.0)
+    ten_err = max(
+        abs(h.tenant_request_g.sum() / max(h.req_gco2, 1e-9) - 1.0),
+        abs(s.tenant_request_g.sum() / max(s.req_gco2, 1e-9) - 1.0))
+    tenant_ok = bool(ten_err < 1e-4)
+    row("serving_parity", 0.0,
+        f"bitwise={bitwise};zero_qps_noop={zero_noop};"
+        f"tenant_rel_err={ten_err:.2e};served={h.req_served}")
+
+    # --- (SLO x greenness) grid as ONE batched ensemble ----------------
+    slos = (10.5, 11.0, 12.0, 14.0, 18.0)
+    gammas = (0.0, 0.25, 0.5, 0.75, 1.0)
+    tc = TrafficConfig(req_rate=qps, n_svc=4, flash_rate=0.0,
+                       mu_per_chip=0.1)
+    runs, metas = [], []
+    for seed in seeds:
+        # n/3 arrivals/h at 10h mean duration saturates chips_per_node=64
+        # (n=48 reproduces the test-suite DENSE regime exactly)
+        cfg = SimConfig(epochs=epochs, seed=seed, arrival_rate=n / 3.0,
+                        mean_duration_h=10.0, shortlist=16, history_h=48,
+                        horizon_h=8, chips_lo=8, chips_hi=32, traffic=tc)
+        fleet, traces, ridx = synthetic_lifecycle_fleet(n, cfg,
+                                                        chips_per_node=64)
+        jobs = generate_jobs(cfg)
+        for slo in slos:
+            for g in gammas:
+                runs.append((fleet, traces, ridx, policy(cfg, slo, g),
+                             jobs))
+                metas.append((slo, g, seed))
+    keys = {_bucket_key(_prepare_scan_run(f, tr, ri, c, j))
+            for f, tr, ri, c, j in runs}
+    one_bucket = len(keys) == 1
+    row("serving_one_bucket", 0.0,
+        f"buckets={len(keys)};lanes={len(runs)}")
+
+    t0 = time.perf_counter()
+    results = simulate_fleet_ensemble(runs)
+    ens_s = time.perf_counter() - t0
+    by = {m: r for m, r in zip(metas, results)}
+
+    recs = []
+    for (slo, g, seed), r in by.items():
+        served = max(r.req_served, 1)
+        recs.append({"policy": f"slo{slo:g}_g{g:g}", "seed": seed,
+                     "slo_s": slo, "greenness": g,
+                     "miss_rate": r.p99_violations / served,
+                     "req_p99_s": r.req_p99_s,
+                     "g_per_req": r.req_gco2 / served})
+    front = pareto_frontier(recs, x="req_p99_s", y="g_per_req")
+    xs = [p["req_p99_s"] for p in front]
+    ys = [p["g_per_req"] for p in front]
+    frontier_monotone = bool(
+        all(b > a for a, b in zip(xs, xs[1:]))
+        and all(b < a for a, b in zip(ys, ys[1:])))
+    row("serving_frontier", 0.0,
+        f"points={len(front)};monotone={frontier_monotone};"
+        f"p99=[{xs[0]:.2f}..{xs[-1]:.2f}]s;"
+        f"g_per_req=[{ys[-1]:.4f}..{ys[0]:.4f}]")
+
+    # greenness sweep at the middle SLO: carbon must fall monotonically
+    mid = slos[len(slos) // 2]
+
+    def gpr(slo, g):
+        return float(np.mean([by[(slo, g, s)].req_gco2
+                              / max(by[(slo, g, s)].req_served, 1)
+                              for s in seeds]))
+
+    curve = [{"greenness": g, "g_per_req": gpr(mid, g),
+              "req_p99_s": float(np.mean(
+                  [by[(mid, g, s)].req_p99_s for s in seeds]))}
+             for g in gammas]
+    gs = [pt["g_per_req"] for pt in curve]
+    green_monotone = bool(all(b <= a * (1.0 + 1e-9)
+                              for a, b in zip(gs, gs[1:]))
+                          and gs[-1] < gs[0])
+    saving_pct = 100.0 * (1.0 - gs[-1] / gs[0])
+    row(f"serving_ensemble_n{n}_t{epochs}",
+        ens_s * 1e6 / max(len(runs), 1),
+        f"lanes={len(runs)};green_monotone={green_monotone};"
+        f"greenness_saving={saving_pct:+.2f}%")
+
+    entry = {"n": n, "epochs": epochs, "gate_scale": gate_scale,
+             "qps": qps, "seeds": list(seeds),
+             "slos": list(slos), "gammas": list(gammas),
+             "parity": {"bitwise": bitwise, "zero_qps_noop": zero_noop,
+                        "tenant_ok": tenant_ok,
+                        "req_gco2_rel_err": rel,
+                        "req_served": int(h.req_served),
+                        "p99_violations": int(h.p99_violations)},
+             "placement_digest": digest(base_h),
+             "one_bucket": bool(one_bucket),
+             "lanes": len(runs), "ens_s": ens_s,
+             "grid": recs,
+             "frontier": front,
+             "frontier_points": len(front),
+             "frontier_monotone": frontier_monotone,
+             "greenness_curve": curve,
+             "greenness_monotone": green_monotone,
+             "greenness_saving_pct": saving_pct}
+    write_artifact("BENCH_serving.json", {"configs": [entry]},
+                   {"n": n, "epochs": epochs, "qps": qps,
+                    "seeds": list(seeds)})
+    if not bitwise:
+        raise SystemExit(
+            "host-vs-scan request parity broke: counters, digests or "
+            f"request carbon diverged (rel err {rel:.2e})")
+    if not zero_noop:
+        raise SystemExit(
+            "zero-QPS traffic layer is no longer a bitwise no-op "
+            "against traffic=None")
+    if not tenant_ok:
+        raise SystemExit(
+            f"per-tenant request attribution broke conservation "
+            f"(rel err {ten_err:.2e})")
+    if not one_bucket:
+        raise SystemExit(
+            f"(SLO x greenness) grid split into {len(keys)} compiled "
+            f"buckets — a router knob leaked into the graph statics")
+    if len(front) < 5 or not frontier_monotone:
+        raise SystemExit(
+            f"carbon-vs-p99 frontier degenerate: {len(front)} points, "
+            f"monotone={frontier_monotone}")
+    if not green_monotone:
+        raise SystemExit(
+            f"greenness no longer trades carbon down monotonically at "
+            f"slo={mid}: {gs}")
+
+
 def bench_train_step_smoke():
     from repro.configs import ARCHS
     from repro.models.model import ModelFlags, build_model
@@ -1072,6 +1283,7 @@ BENCHES = {
     "policy": bench_policy,
     "robustness": bench_robustness,
     "energy": bench_energy,
+    "serving": bench_serving,
     "train_step_smoke": bench_train_step_smoke,
     "decode_step_smoke": bench_decode_step_smoke,
     "roofline_report": bench_roofline_report,

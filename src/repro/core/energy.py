@@ -85,6 +85,13 @@ class EnergyModel:
         """kWh for one chip checkpointing for ``overhead_h`` hours."""
         return self.job_energy_kwh(overhead_h * 3600.0, 1, 1)
 
+    def req_kwh(self, service_s):
+        """kWh for one served request: one chip busy for ``service_s``
+        seconds (the M/M/c service time ``1/mu``).  The QPS router scales
+        this by the node's PUE·CI for the per-request marginal-carbon
+        attribution (``SimResult.req_gco2``)."""
+        return self.job_energy_kwh(service_s, 1, 1)
+
     # ---- fleet-level power ----
 
     @property

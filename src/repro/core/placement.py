@@ -118,6 +118,21 @@ def _register_barrier_batching() -> None:
 _register_barrier_batching()
 
 
+def rounding_pin(xp):
+    """The f32 rounding pin for ``xp``-generic parity code: the
+    ``optimization_barrier`` identity under jnp (vmap-batchable via the
+    rule above), a plain identity on numpy.  The QPS router
+    (``repro.core.router``) pins its greenness-blend multiply with this
+    so the host and scanned drivers cannot diverge by operator fusion —
+    the same discipline this module's scoring path applies at every
+    mul→add seam.  Serving replicas draw on the same chip capacity this
+    engine allocates, so the router's parity contract rides on the same
+    pin."""
+    if xp is jnp:
+        return jax.lax.optimization_barrier
+    return lambda x: x
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class PlacementResult:

@@ -94,6 +94,12 @@ class PolicyConfig:
     value_weight: float = 0.5        # value -> green-threshold tightening
     deadline_lo: int = 1             # per-job start-slack draw, inclusive
     deadline_hi: int = 0             # 0 -> defer_max_h
+    # --- QPS router (active when SimConfig.traffic is set) ---
+    # Both reach the compiled graph as traced data (the host-built
+    # lambda_caps table and the per-run greenness scalar), so a
+    # (latency-SLO x greenness) grid shares one compiled trajectory.
+    router_slo_s: float = 2.0        # per-request p99 latency SLO (s)
+    router_greenness: float = 1.0    # γ: carbon water-fill vs even split
 
     def __post_init__(self):
         if self.migration not in ("reactive", "lookahead"):
@@ -108,7 +114,9 @@ class PolicyConfig:
         (``value_weight``/``queue_cap``/deadline draws via per-job
         columns; ``defer_green_factor`` via the per-run ``green_factor``
         scalar or, under SLO, the per-job ``thresh`` column;
-        ``green_gate`` via the per-run ``green_gate`` scalar) then hash
+        ``green_gate`` via the per-run ``green_gate`` scalar;
+        ``router_slo_s``/``router_greenness`` via the host-built
+        ``lambda_caps`` table and the per-run greenness scalar) then hash
         to the SAME static and share one compiled trajectory — the
         compile-sharing ``sweep_policies`` and the batched ensemble
         (``simulator.simulate_fleet_ensemble``) both rely on it.  Only
@@ -116,7 +124,8 @@ class PolicyConfig:
         ``lookahead_h``/``discount`` under the planner (forecast-tensor
         shape/weights) remain graph-relevant."""
         kw = dict(value_weight=0.0, queue_cap=0, deadline_lo=1,
-                  deadline_hi=0, defer_green_factor=0.0, green_gate=1.4)
+                  deadline_hi=0, defer_green_factor=0.0, green_gate=1.4,
+                  router_slo_s=2.0, router_greenness=1.0)
         if self.migration != "lookahead":
             kw.update(lookahead_h=12, discount=0.9)
         return dataclasses.replace(self, **kw)

@@ -1,0 +1,282 @@
+"""Carbon-aware QPS router: marginal-carbon water-filling under p99 SLOs.
+
+Splits each service's offered request load (``core.traffic``) across its
+placed replicas by *marginal carbon* — the per-request operating rate
+``EnergyModel.req_kwh · PUE · CI`` of the replica's node — subject to a
+latency constraint from an analytic M/M/c queueing model over the
+replica's chip capacity.  One epoch of routing is ONE call to
+:func:`route_epoch`, written once in numpy/jnp-generic form (``xp = np``
+on the host loop, ``jnp`` in the scanned core) and consumed identically
+by both simulator drivers, so routing decisions are **bit-exact** across
+them — the same two-drivers-one-graph contract as placement and policy.
+
+Bit-exactness strategy (why this looks the way it does):
+
+- **Integer demand.**  Request counts are int32 (``traffic.REQ_CAP``
+  bounds every product); splits, prefix sums and spills are pure int32
+  arithmetic, which numpy and XLA:CPU cannot disagree on.  The only
+  float in the *decision* path is the f32 sort key ``pue·ci`` (a single
+  correctly-rounded multiply of identical f32 inputs on both drivers)
+  and the f32 greenness blend ``floor(γ·R)`` (one multiply + floor,
+  pinned with placement's rounding discipline).
+- **Host-built capacity table.**  The M/M/c inversion (max arrival rate
+  with modeled p99 <= SLO) involves division and bisection, so it is
+  computed ONCE per run on the host (:func:`lambda_caps`, f64 numpy) and
+  fed to the scanned core as traced int32 *data* — a (SLO x greenness)
+  grid shares one compiled trajectory, and both drivers gather from the
+  byte-identical table.
+- **Rational queueing model.**  Erlang C comes from the Erlang-B
+  recurrence (add/mul/div only) and the p99 tail uses the exponential-
+  wait approximation ``p99 = 1/mu + ln(100)·Wq`` with ``ln(100)`` a
+  precomputed host constant — no traced transcendentals anywhere.
+  :func:`modeled_p99` is a *metric* (reported to f32/f64 tolerance like
+  emissions), never a decision input inside an epoch.
+
+Water-fill semantics per service: a ``(1-γ)·R`` share is split equally
+across replicas first — the carbon-blind load-balancing baseline — then
+the ``floor(γ·R)`` green share fills lanes in carbon order (replicas sort
+by carbon rate, then job id) up to each lane's RESIDUAL p99-feasible
+capacity (infeasible lanes — service time alone above the SLO — have
+capacity 0 and are skipped), so the blend itself never pushes a lane over
+its admissible rate.  Overload beyond total feasible capacity spills onto
+the lowest-carbon *feasible* replica (or the lowest-carbon replica
+outright when none is feasible) and is counted as a p99 violation.  ``γ``
+thus interpolates between "spread for latency" and "concentrate for
+carbon" — the knob the carbon-vs-p99 Pareto frontier sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.placement import rounding_pin
+from repro.core.traffic import REQ_CAP
+
+__all__ = ["LN100", "LN2", "erlang_c", "mmc_p99", "mmc_p50",
+           "lambda_caps", "modeled_p99", "route_epoch"]
+
+#: Tail constants, precomputed on the host so traced code stays rational.
+LN100 = float(np.log(100.0))
+LN2 = float(np.log(2.0))
+
+#: Modeled p99 reported for unstable lanes (offered >= capacity).
+_P99_UNSTABLE_S = 1.0e6
+
+
+# ---------------------------------------------------------------------------
+# analytic M/M/c model (host f64 reference; xp-generic metric variant)
+# ---------------------------------------------------------------------------
+
+
+def erlang_c(c, a):
+    """Erlang-C delay probability C(c, a) via the Erlang-B recurrence —
+    rational ops only.  ``c`` int array-like (servers), ``a`` offered
+    load in Erlangs (lam/mu); requires ``a < c`` for a meaningful queue.
+    Vectorized host/f64 reference (the traced twin lives in
+    :func:`modeled_p99` with a static unroll bound)."""
+    c = np.asarray(c, np.int64)
+    a = np.asarray(a, np.float64)
+    b = np.ones(np.broadcast(c, a).shape, np.float64)
+    for k in range(1, int(c.max(initial=0)) + 1):
+        b = np.where(k <= c, (a * b) / (k + a * b), b)
+    denom = np.maximum(c - a * (1.0 - b), 1e-300)
+    return np.where(c > 0, c * b / denom, 1.0)
+
+
+def _mmc_percentile(c, mu, lam, ln_q):
+    """Sojourn percentile: service time + exponential-wait tail
+    ``ln_q · Wq`` with ``Wq = C/(c·mu - lam)``.  Unstable (lam >= c·mu)
+    -> :data:`_P99_UNSTABLE_S`."""
+    c = np.asarray(c, np.int64)
+    lam = np.asarray(lam, np.float64)
+    denom = c * float(mu) - lam
+    stable = (denom > 0.0) & (c > 0)
+    wq = erlang_c(c, lam / float(mu)) / np.maximum(denom, 1e-300)
+    return np.where(stable, 1.0 / float(mu) + ln_q * wq, _P99_UNSTABLE_S)
+
+
+def mmc_p99(c, mu, lam):
+    """Modeled p99 sojourn time (s) of an M/M/c replica: ``c`` chips each
+    serving ``mu`` req/s, offered ``lam`` req/s.  Monotone increasing in
+    ``lam`` and decreasing in ``c`` (hypothesis-tested)."""
+    return _mmc_percentile(c, mu, lam, LN100)
+
+
+def mmc_p50(c, mu, lam):
+    """Modeled p50 sojourn time (s) — same tail approximation at ln 2."""
+    return _mmc_percentile(c, mu, lam, LN2)
+
+
+def lambda_caps(c_max: int, mu: float, slo_s: float, *,
+                epoch_s: float = 3600.0, iters: int = 60) -> np.ndarray:
+    """Per-chip-count feasible capacity table: entry ``c`` is the largest
+    int32 requests/epoch a ``c``-chip replica can serve with modeled p99
+    <= ``slo_s`` (0 when even the bare service time breaks the SLO —
+    the *infeasible replica* mask).  Fixed-iteration f64 bisection on
+    ``lam in [0, c·mu)``; computed once per run on the HOST and consumed
+    by both drivers as data, so the scanned core never reruns the
+    inversion (see module docstring).  Capped at ``traffic.REQ_CAP``."""
+    cs = np.arange(int(c_max) + 1, dtype=np.int64)
+    mu, slo_s = float(mu), float(slo_s)
+    lo = np.zeros(cs.shape, np.float64)
+    hi = np.maximum(cs * mu, 0.0)
+    for _ in range(int(iters)):
+        mid = 0.5 * (lo + hi)
+        ok = mmc_p99(cs, mu, mid) <= slo_s
+        lo = np.where(ok, mid, lo)
+        hi = np.where(ok, hi, mid)
+    feasible = (cs > 0) & (1.0 / mu <= slo_s)
+    cap = np.floor(lo * epoch_s)
+    return np.where(feasible, np.minimum(cap, REQ_CAP), 0).astype(np.int32)
+
+
+def modeled_p99(xp, routed, chips, c_max: int, mu, *,
+                epoch_s: float = 3600.0):
+    """Per-lane modeled p99 sojourn (s) at the routed per-epoch load —
+    the traced twin of :func:`mmc_p99` with the Erlang-B recurrence
+    unrolled to the static ``c_max``.  Rational ops + host ``ln``
+    constants only; this is a reported *metric* (f64 host vs f32 scan,
+    emissions-style rtol), not a routing decision input."""
+    ft = np.float64 if xp is np else xp.float32
+    c = xp.asarray(chips).astype(ft)
+    lam = xp.asarray(routed).astype(ft) / ft(epoch_s)
+    a = lam / mu
+    b = xp.ones(lam.shape, ft)
+    for k in range(1, int(c_max) + 1):
+        ab = a * b
+        b = xp.where(k <= c, ab / (k + ab), b)
+    denom2 = xp.maximum(c - a * (1.0 - b), ft(1e-30))
+    ec = c * b / denom2
+    denom = c * mu - lam
+    stable = (denom > 0.0) & (c > 0)
+    wq = ec / xp.maximum(denom, ft(1e-30))
+    return xp.where(stable, 1.0 / mu + ft(LN100) * wq,
+                    ft(_P99_UNSTABLE_S))
+
+
+# ---------------------------------------------------------------------------
+# the per-epoch router (xp-generic, bit-exact across drivers)
+# ---------------------------------------------------------------------------
+
+
+def _seg_sum(xp, size: int, idx, vals, dtype):
+    """Scatter-add ``vals`` into ``size`` segment bins (indices always in
+    range by construction — the sentinel segment is the last bin)."""
+    if xp is np:
+        out = np.zeros(size, dtype)
+        np.add.at(out, idx, vals.astype(dtype))
+        return out
+    return xp.zeros((size,), dtype).at[idx].add(vals.astype(dtype))
+
+
+def _sort_lanes(xp, skey, carbon, jid):
+    """Permutation sorting lanes by (service, carbon rate, job id) —
+    ``np.lexsort`` on the host, stable ``lax.sort`` in the scanned core;
+    job ids are unique among real lanes, so the order (hence the
+    permutation restricted to them) is identical across drivers."""
+    if xp is np:
+        return np.lexsort((jid, carbon, skey))
+    arange = xp.arange(skey.shape[0], dtype=xp.int32)
+    return jax.lax.sort((skey, carbon, jid, arange), num_keys=3)[3]
+
+
+def route_epoch(xp, *, req_t, svc, jid, weight, cap, carbon, n_svc: int,
+                greenness):
+    """Split one epoch's fleet request load across serving replicas.
+
+    Lanes are job slots: ``svc`` (i32, -1 = not a serving replica or not
+    active), ``jid`` (i32 job id, unique among real lanes), ``weight``
+    (i32 QPS share weight), ``cap`` (i32 p99-feasible requests/epoch from
+    :func:`lambda_caps`), ``carbon`` (f32 marginal-carbon sort key
+    ``pue·ci`` of the replica's node).  ``req_t`` is the epoch's fleet
+    request count (i32 scalar), ``greenness`` the f32 carbon-greediness
+    ``γ``, ``n_svc`` the static service count.
+
+    Returns ``(routed, offered)``: per-lane int32 requests routed and the
+    per-service int32 offered load (bin ``n_svc`` is the inactive
+    sentinel, always 0).  Conservation: ``routed`` sums to ``offered``
+    within every service that has at least one active replica; ``offered``
+    sums to ``req_t`` whenever any replica is active.  All arithmetic is
+    int32 + two pinned f32 ops (see module docstring), so both drivers
+    produce byte-identical splits."""
+    pin = rounding_pin(xp)
+    i32 = np.int32 if xp is np else xp.int32
+    f32 = np.float32 if xp is np else xp.float32
+    greenness = xp.asarray(greenness).astype(f32)
+    L = svc.shape[0]
+    act = svc >= 0
+    skey = xp.where(act, svc, n_svc).astype(i32)
+    carbon_k = xp.where(act, carbon, 0.0).astype(f32)
+    jid_k = xp.asarray(jid).astype(i32)
+    w = xp.where(act, weight, 0).astype(i32)
+    capi = xp.where(act, cap, 0).astype(i32)
+    one = act.astype(i32)
+
+    # ---- offered load per service: integer weight shares --------------
+    seg_w = _seg_sum(xp, n_svc + 1, skey, w, i32)
+    w_tot = seg_w[:n_svc].sum()
+    req_t = xp.asarray(req_t).astype(i32)
+    offered = xp.where(w_tot > 0,
+                       (req_t * seg_w) // xp.maximum(w_tot, 1), 0)
+    offered = xp.where(xp.arange(n_svc + 1) < n_svc, offered, 0)
+    # floor remainder goes to the first service carrying weight
+    first_s = xp.argmax(seg_w[:n_svc] > 0)
+    rem_t = req_t - offered[:n_svc].sum()
+    offered = offered + xp.where(
+        (xp.arange(n_svc + 1) == first_s) & (w_tot > 0), rem_t, 0)
+
+    # ---- sort lanes by (service, marginal carbon, jid) ----------------
+    perm = _sort_lanes(xp, skey, carbon_k, jid_k)
+    s_s = skey[perm]
+    cap_s = capi[perm]
+    act_s = s_s < n_svc
+    one_s = act_s.astype(i32)
+    feas_s = (act_s & (cap_s > 0)).astype(i32)
+
+    # segment-exclusive prefixes (int32 cumsums: exact on both drivers)
+    def seg_prefix(vals):
+        cs = xp.cumsum(vals)
+        totals = _seg_sum(xp, n_svc + 1, s_s, vals, i32)
+        base = xp.cumsum(totals) - totals
+        return cs - base[s_s], totals
+
+    arank, seg_cnt = seg_prefix(one_s)        # 1-based active rank
+    frank, seg_feas = seg_prefix(feas_s)      # 1-based feasible rank
+
+    # ---- greenness blend: (1-γ)·R splits even, γ·R water-fills the ----
+    # ---- RESIDUAL capacity by carbon ----------------------------------
+    r_seg = offered
+    r_green = xp.floor(pin(greenness * r_seg.astype(f32))).astype(i32)
+    r_green = xp.clip(r_green, 0, r_seg)
+    r_even = r_seg - r_green
+
+    # carbon-blind even split of the (1-γ) share across active replicas
+    # (cap-blind by design — the baseline comparator pays its violations)
+    q = r_even // xp.maximum(seg_cnt, 1)
+    rem = r_even - q * seg_cnt
+    even = xp.where(act_s,
+                    q[s_s] + (arank <= rem[s_s]).astype(i32), 0)
+
+    # capped carbon-order fill of the green share into what the even
+    # split left of each lane's admissible rate — a lane never exceeds
+    # its cap from the blend itself, only from the even baseline or spill
+    cap_res = xp.maximum(xp.where(act_s, cap_s, 0) - even, 0)
+    prefix_res, _ = seg_prefix(cap_res)
+    prefix_res = prefix_res - cap_res          # exclusive
+    green = xp.clip(r_green[s_s] - prefix_res, 0, cap_res)
+    g_fill = _seg_sum(xp, n_svc + 1, s_s, green, i32)
+    leftover = r_green - g_fill
+    # overload spills to the lowest-carbon feasible replica; when no
+    # replica is feasible, to the lowest-carbon one outright
+    spill_tgt = xp.where(seg_feas[s_s] > 0,
+                         (feas_s > 0) & (frank == 1),
+                         act_s & (arank == 1))
+    green = green + xp.where(spill_tgt, leftover[s_s], 0)
+
+    routed_s = xp.where(act_s, green + even, 0)
+    if xp is np:
+        routed = np.zeros(L, np.int32)
+        routed[perm] = routed_s
+    else:
+        routed = xp.zeros((L,), i32).at[perm].set(routed_s)
+    return routed, offered

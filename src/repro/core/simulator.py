@@ -69,9 +69,12 @@ import numpy as np
 
 from repro.core import forecast, telemetry
 from repro.core import policy as policylib
+from repro.core import router as routerlib
 from repro.core.energy import DEFAULT_ENERGY, EnergyModel
 from repro.core.faults import (FaultConfig, FaultPlan, fault_graph_key,
                                plan_faults)
+from repro.core.traffic import (TrafficConfig, TrafficPlan, plan_traffic,
+                                traffic_graph_key, validate_qps_weights)
 from repro.core.fleet import Fleet
 from repro.core.placement import (place_lifecycle_batched,
                                   place_lifecycle_full_rerank,
@@ -113,6 +116,16 @@ class SimConfig:
     # signal the policies read while emission accounting stays on ground
     # truth.  Only fault_graph_key(faults) shapes the compiled scan.
     faults: Optional[FaultConfig] = None
+    # --- request-level serving traffic (see repro.core.traffic/router) ---
+    # None = no serving layer (the historical behavior, bit-identical to
+    # the pre-traffic golden trajectories).  A TrafficConfig attaches a
+    # seeded fleet-QPS stream: placed jobs with a ``svc_class`` become
+    # replicas sharing the chip capacity placement allocated, and every
+    # epoch the marginal-carbon router splits the offered requests across
+    # them under ``policy.router_slo_s`` (see step 5 of the epoch).  Only
+    # traffic_graph_key(traffic) — the service count — shapes the
+    # compiled scan; rates/SLO/greenness are traced data.
+    traffic: Optional[TrafficConfig] = None
     # manual override for the scanned core's job-table width (0 = the
     # sound ScanPlan bound); surfaced by the slot-overflow error message
     scan_slots: int = 0
@@ -170,7 +183,10 @@ class JobSchedule:
     ``deadline``/``value`` are the SLO-deferral columns (latest start
     slack in epochs and queue-priority value); ``None`` means the policy
     layer derives the reactive defaults (``defer_max_h`` slack for
-    deferrable jobs, unit value) — see ``policy.Policy.for_jobs``."""
+    deferrable jobs, unit value) — see ``policy.Policy.for_jobs``.
+    ``svc_class``/``qps_weight`` are the serving columns (which service a
+    placed replica belongs to, and its share of that service's QPS);
+    ``None`` or ``svc_class < 0`` means the job serves no requests."""
     arrive: np.ndarray      # (J,) epoch of arrival
     chips: np.ndarray       # (J,) chip demand
     duration: np.ndarray    # (J,) epochs of runtime
@@ -179,6 +195,8 @@ class JobSchedule:
     deadline: Optional[np.ndarray] = None   # (J,) start slack in epochs
     value: Optional[np.ndarray] = None      # (J,) f32 job value
     tenant: Optional[np.ndarray] = None     # (J,) tenant id (attribution)
+    qps_weight: Optional[np.ndarray] = None  # (J,) i32 QPS share weight
+    svc_class: Optional[np.ndarray] = None   # (J,) i32 service; -1 = none
 
     @property
     def n(self) -> int:
@@ -221,11 +239,23 @@ def generate_jobs(cfg: SimConfig) -> JobSchedule:
     tenant = None
     if cfg.n_tenants > 0:
         tenant = rng.integers(0, cfg.n_tenants, J).astype(np.int32)
+    # serving columns draw after EVERY other column (reactive, SLO,
+    # tenant) so attaching a traffic layer perturbs none of the earlier
+    # streams — the committed golden digests depend on this order
+    qps_weight = svc_class = None
+    if cfg.traffic is not None and cfg.traffic.n_svc > 0:
+        tc = cfg.traffic
+        serving = rng.random(J) < tc.serve_frac
+        svc_class = np.where(serving, rng.integers(0, tc.n_svc, J),
+                             -1).astype(np.int32)
+        qps_weight = np.where(serving, rng.integers(1, tc.weight_hi + 1, J),
+                              0).astype(np.int32)
     return JobSchedule(arrive=arrive, chips=chips.astype(np.int64),
                        duration=duration.astype(np.int64),
                        load=chips.astype(np.float64),
                        deferrable=deferrable, deadline=deadline,
-                       value=value, tenant=tenant)
+                       value=value, tenant=tenant,
+                       qps_weight=qps_weight, svc_class=svc_class)
 
 
 @dataclasses.dataclass
@@ -254,6 +284,18 @@ class SimResult:
     # bin is the unattributed idle/overhead remainder.  Bins sum exactly
     # to emissions_g (conservation by construction).
     tenant_emissions_g: Optional[np.ndarray] = None
+    # --- request-serving layer (SimConfig.traffic; see core.router) ---
+    req_served: int = 0             # requests routed onto replicas
+    req_offered: int = 0            # requests offered to active services
+    # request-attributed gCO2: an *attribution slice* of the node energy
+    # already counted in emissions_g (NOT added on top — the traffic-free
+    # and zero-QPS trajectories stay bitwise identical to the goldens)
+    req_gco2: float = 0.0
+    p99_violations: int = 0         # replica-epochs routed above lambda_max
+    req_p99_s: float = 0.0          # request-weighted modeled p99 (s)
+    # (n_tenants + 1,) request gCO2 per tenant (spare last bin stays 0);
+    # bins sum exactly to req_gco2
+    tenant_request_g: Optional[np.ndarray] = None
 
 
 # ---------------------------------------------------------------------------
@@ -518,6 +560,33 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
                 cfg.horizon_h, cfg.policy.lookahead_h, cfg.policy.discount,
                 fc_fallback)]
 
+    # request-serving traffic: the router reads state AFTER the epoch's
+    # placements settle (step 5b) and never feeds back into placement, so
+    # every traffic-free metric above stays bitwise identical
+    tcfg = cfg.traffic
+    n_svc = traffic_graph_key(tcfg)
+    req_served = req_offered = req_viol = 0
+    req_g = p99_wsum = 0.0
+    ten_req = None
+    if n_svc > 0:
+        validate_qps_weights(jobs.qps_weight)
+        if jobs.svc_class is None:
+            raise ValueError("SimConfig.traffic requires a JobSchedule "
+                             "svc_class column (generate_jobs draws it "
+                             "when cfg.traffic is set)")
+        tplan = plan_traffic(tcfg, T, cfg.seed)
+        svc_col = np.asarray(jobs.svc_class, np.int32)
+        w_col = np.asarray(jobs.qps_weight, np.int32)
+        c_max_r = int(np.max(jobs.chips, initial=1))
+        # per-replica admissible rate: the M/M/c inversion runs ONCE here
+        # in f64 and feeds both drivers as integer data (parity contract)
+        lam_cap = routerlib.lambda_caps(c_max_r, tcfg.mu_per_chip,
+                                        cfg.policy.router_slo_s)
+        pue32 = np.asarray(fleet0.pue, np.float32)
+        green32 = np.float32(cfg.policy.router_greenness)
+        req_kwh = float(em_host.req_kwh(1.0 / tcfg.mu_per_chip))
+        ten_req = np.zeros(n_ten + 1) if n_ten else None
+
     for t in range(T):
         a = cfg.history_h + t
         ci_col = region_ci[:, a][ridx]      # (N,) f64 TRUE (accounting)
@@ -774,6 +843,34 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
             util_m[:, t] = load_on
             on_m[:, t] = on.astype(np.float64)
 
+        # ---- 5b. request routing + serving attribution --------------
+        # lanes are the epoch's post-placement active jobs; the routing
+        # DECISION reads the observed CI column (f32, as the scan core
+        # does), the request-carbon ATTRIBUTION reads ground truth (f64)
+        if n_svc > 0:
+            act_r = np.where(jstate == _ACTIVE)[0]
+            jn = jnode[act_r]
+            ci_r32 = np.asarray(obs_ci[:, a], np.float32)
+            carbon = pue32[jn] * ci_r32[ridx[jn]]
+            chips_l = np.asarray(jobs.chips[act_r], np.int64)
+            cap_l = lam_cap[np.minimum(chips_l, c_max_r)]
+            routed, offered = routerlib.route_epoch(
+                np, req_t=np.int32(tplan.req[t]), svc=svc_col[act_r],
+                jid=act_r.astype(np.int32), weight=w_col[act_r],
+                cap=cap_l, carbon=carbon, n_svc=n_svc, greenness=green32)
+            req_served += int(routed.sum())
+            req_offered += int(offered[:n_svc].sum())
+            req_viol += int(((routed > cap_l)
+                             & (svc_col[act_r] >= 0)).sum())
+            g_lane = routed.astype(np.float64) * (
+                req_kwh * pue_h[jn] * ci_col[jn])
+            req_g += float(g_lane.sum())
+            p99_l = routerlib.modeled_p99(np, routed, chips_l, c_max_r,
+                                          tcfg.mu_per_chip)
+            p99_wsum += float((routed.astype(np.float64) * p99_l).sum())
+            if n_ten:
+                np.add.at(ten_req, ten[act_r], g_lane)
+
     # jobs still waiting in the deferral queue when the horizon ends were
     # never run: account them as dropped (and as deadline misses — every
     # queued job has slack > 0) so totals reconcile with jobs.n
@@ -796,7 +893,11 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
                      safe_epochs=int(fplan.safe.sum())
                      if fplan is not None else 0,
                      start_epoch=jstart, util=util_m, on=on_m,
-                     tenant_emissions_g=tenant_g)
+                     tenant_emissions_g=tenant_g,
+                     req_served=req_served, req_offered=req_offered,
+                     req_gco2=req_g, p99_violations=req_viol,
+                     req_p99_s=p99_wsum / max(req_served, 1),
+                     tenant_request_g=ten_req)
 
 
 def _place_blind(dem: np.ndarray, tgt: np.ndarray, cap: np.ndarray,
@@ -949,7 +1050,7 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
       a searchsorted replaces a fleet-wide scatter-min."""
     (T, S, a_max, d_cap, rel_cap, m_evict, budget, chips_max, history_h,
      defer_max_h, outage, power_off_idle, consolidate, n_ten,
-     pcfg, fkey) = dims
+     pcfg, fkey, n_svc) = dims
     faulty, fault_mig, fault_flap = fkey     # faults.fault_graph_key
     N = arrs["capacity"].shape[-1]
     engine, shortlist = statics[0], statics[1]
@@ -994,6 +1095,8 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
         traces).  Per-trajectory — the ensemble vmaps it over lanes."""
         traces = arrs["traces"]
         xs = {"t": ts, "arr": arrs["arr_ids"]}
+        if n_svc > 0:
+            xs["req"] = arrs["tr_req"]
         if faulty:
             xs["safe"] = arrs["f_safe"]
             if fault_flap:
@@ -1228,6 +1331,8 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
                    migrations_t=migrations_t, mig_cost_t=mig_cost_t,
                    mig_cost=mig_cost, overflow=overflow,
                    ci_true=ci_true, failed_t=failed_t)
+        if n_svc > 0:
+            mid["req_t"] = x["req"]
         if budget > 0 and n_ten > 0:
             # mover tenants read pre-update slot_jid (still valid here);
             # mc_vec is zero for non-winning lanes so junk indices are
@@ -1396,6 +1501,47 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
         else:
             ten_t = jnp.zeros((1,), jnp.float32)
 
+        if n_svc > 0:
+            # ---- 5b. request routing + serving attribution -----------
+            # lanes are the POST-update slot tables (the host routes over
+            # the end-of-epoch active set); the routing DECISION reads
+            # the observed CI column — mid["ci_col"] is degraded under
+            # faults, exactly like every placement decision above — and
+            # the request-carbon ATTRIBUTION reads ground truth.  All
+            # arithmetic inside route_epoch is int32 except two pinned
+            # f32 ops, so routed/offered match the host loop bit-exactly
+            # (see repro.core.router).
+            occ_r = slot_jid >= 0
+            r_jid = jnp.maximum(slot_jid, 0)
+            svc_l = jnp.where(occ_r, arrs["svc"][r_jid], -1)
+            w_l = jnp.where(occ_r, arrs["qweight"][r_jid], 0)
+            chips_l = jnp.where(occ_r, arrs["chips"][r_jid], 0)
+            cap_l = jnp.where(
+                occ_r, arrs["lam_cap"][jnp.clip(chips_l, 0, chips_max)],
+                0)
+            node_l = jnp.clip(slot_node, 0, N - 1)
+            carbon_l = pue[node_l] * mid["ci_col"][node_l]
+            routed, offered = routerlib.route_epoch(
+                jnp, req_t=mid["req_t"], svc=svc_l, jid=slot_jid,
+                weight=w_l, cap=cap_l, carbon=carbon_l, n_svc=n_svc,
+                greenness=arrs["greenness"])
+            served_t = jnp.sum(routed)
+            offered_t = jnp.sum(offered[:n_svc])
+            viol_t = jnp.sum(((routed > cap_l)
+                              & (svc_l >= 0)).astype(jnp.int32))
+            g_lane = routed.astype(jnp.float32) * (
+                arrs["en_reqkwh"] * (pue[node_l] * mid["ci_true"][node_l]))
+            reqg_t = jnp.sum(g_lane)
+            p99_l = routerlib.modeled_p99(jnp, routed, chips_l,
+                                          chips_max, arrs["tr_mu"])
+            p99w_t = jnp.sum(routed.astype(jnp.float32) * p99_l)
+            if n_ten > 0:
+                tenreq_t = jnp.zeros((n_ten + 1,), jnp.float32).at[
+                    jnp.where(occ_r, arrs["tenant"][r_jid], n_ten)].add(
+                    g_lane, mode="drop")
+            else:
+                tenreq_t = jnp.zeros((1,), jnp.float32)
+
         carry = (cap2, njobs, slot_jid, slot_node, slot_end, defer_ids,
                  mid["mig_cost"] + mid["mig_cost_t"], overflow)
         if fault_mig:
@@ -1409,6 +1555,9 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
               jnp.where(place_new, narr_jid, -1),
               jnp.where(place_new, nnode, -1),
               overflow, mid["failed_t"], ten_t)
+        if n_svc > 0:
+            ys = ys + (served_t, offered_t, viol_t, reqg_t, p99w_t,
+                       tenreq_t)
         return carry, ys
 
     # traced EnergyModel twin for the placement engines ((L,) leaves in
@@ -1514,6 +1663,7 @@ class _ScanRun:
     statics: tuple
     mig_nmax: int           # widest region (rows of the mig_perm table)
     fplan: Optional[FaultPlan] = None   # materialized fault streams
+    tplan: Optional[TrafficPlan] = None  # materialized request stream
 
 
 def _prepare_scan_run(fleet0: Fleet, region_ci: np.ndarray,
@@ -1550,13 +1700,21 @@ def _prepare_scan_run(fleet0: Fleet, region_ci: np.ndarray,
         fplan = plan_faults(cfg.faults, np.asarray(region_ci, np.float64),
                             np.asarray(ridx), cfg.epochs, cfg.history_h,
                             cfg.migration_budget, fleet0.n, cfg.seed)
+    tplan = None
+    if traffic_graph_key(cfg.traffic) > 0:
+        validate_qps_weights(jobs.qps_weight)
+        if jobs.svc_class is None:
+            raise ValueError("SimConfig.traffic requires a JobSchedule "
+                             "svc_class column (generate_jobs draws it "
+                             "when cfg.traffic is set)")
+        tplan = plan_traffic(cfg.traffic, cfg.epochs, cfg.seed)
     sizes = np.bincount(np.asarray(ridx, np.int64),
                         minlength=region_ci.shape[0])
     return _ScanRun(fleet0=fleet0, region_ci=np.asarray(region_ci),
                     ridx=np.asarray(ridx), cfg=cfg, jobs=jobs, pol=pol,
                     plan=plan, statics=statics,
                     mig_nmax=max(int(sizes.max(initial=0)), 1),
-                    fplan=fplan)
+                    fplan=fplan, tplan=tplan)
 
 
 def _bucket_key(run: _ScanRun) -> tuple:
@@ -1571,7 +1729,7 @@ def _bucket_key(run: _ScanRun) -> tuple:
             _outage_windows(cfg.outage),
             cfg.power_off_idle, float(cfg.consolidate),
             cfg.n_tenants > 0, cfg.policy.graph_key(),
-            fault_graph_key(cfg.faults))
+            fault_graph_key(cfg.faults), traffic_graph_key(cfg.traffic))
 
 
 def _shared_dims(runs, pad: bool):
@@ -1595,7 +1753,7 @@ def _shared_dims(runs, pad: bool):
             cfg.history_h, cfg.defer_max_h, outs,
             cfg.power_off_idle, float(cfg.consolidate),
             max(r.cfg.n_tenants for r in runs),
-            cfg.policy.graph_key(), fkey)
+            cfg.policy.graph_key(), fkey, traffic_graph_key(cfg.traffic))
     jp = max((_pad_bucket(max(r.jobs.n, 1)) if pad else max(r.jobs.n, 1))
              for r in runs)
     return dims, jp, max(r.mig_nmax for r in runs)
@@ -1695,6 +1853,25 @@ def _build_arrs(run: _ScanRun, dims: tuple, jp: int, mig_nmax: int):
             thresh=jconst(run.pol.thresh, 1.0, np.float32),
             value=jconst(run.pol.value, np.inf, np.float32),
             deadline=jconst(run.pol.deadline_ep, 0, np.int32))
+    if dims[16] > 0:
+        # request-serving traffic: the seeded QPS stream and the
+        # host-built M/M/c admissible-rate table ride in as integer DATA
+        # (byte-identical to what the host loop routed with — the bit-
+        # exactness contract of repro.core.router), and the SLO/greenness
+        # knobs as traced scalars, so a (slo x greenness) grid shares
+        # this one compiled trajectory
+        tc = cfg.traffic
+        arrs.update(
+            tr_req=jnp.asarray(run.tplan.req),
+            svc=jconst(jobs.svc_class if jobs.svc_class is not None
+                       else np.full(J, -1, np.int32), -1, np.int32),
+            qweight=jconst(jobs.qps_weight if jobs.qps_weight is not None
+                           else np.zeros(J, np.int32), 0, np.int32),
+            lam_cap=jnp.asarray(routerlib.lambda_caps(
+                dims[7], tc.mu_per_chip, cfg.policy.router_slo_s)),
+            greenness=jnp.float32(cfg.policy.router_greenness),
+            tr_mu=jnp.float32(tc.mu_per_chip),
+            en_reqkwh=jnp.float32(em.req_kwh(1.0 / tc.mu_per_chip)))
     return arrs
 
 
@@ -1703,9 +1880,10 @@ def _scan_result(run: _ScanRun, carry, ys) -> SimResult:
     host (numpy inputs; the ensemble slices its member lane first)."""
     jobs, plan, T, J = run.jobs, run.plan, run.cfg.epochs, run.jobs.n
     defer_f, mig_cost_f, overflow_f = carry[5], carry[6], carry[7]
+    ys = [np.asarray(y) for y in ys]
     (e_t, n_sw, completed_t, dropped_t, placed_t, deferred_t, mig_t,
      evi_t, miss_t, mov_jid, mov_node, new_jid, new_node, ov_t,
-     failed_t, ten_t) = [np.asarray(y) for y in ys]
+     failed_t, ten_t) = ys[:16]
     if int(overflow_f) != 0:
         bad = int(np.argmax(ov_t > 0))   # first epoch whose cumulative
         raise RuntimeError(              # overflow count is nonzero
@@ -1755,6 +1933,21 @@ def _scan_result(run: _ScanRun, carry, ys) -> SimResult:
         # structurally zero, and the idle/remainder bin sits last
         tg = ten_t.astype(np.float64).sum(axis=0)
         tenant_g = np.concatenate([tg[:n_run], tg[-1:]])
+    req_kw = {}
+    if len(ys) > 16:
+        served_t, offered_t, viol_t, reqg_t, p99w_t, tenreq_t = ys[16:22]
+        served = int(served_t.astype(np.int64).sum())
+        req_kw = dict(
+            req_served=served,
+            req_offered=int(offered_t.astype(np.int64).sum()),
+            p99_violations=int(viol_t.astype(np.int64).sum()),
+            req_gco2=float(reqg_t.astype(np.float64).sum()),
+            req_p99_s=float(p99w_t.astype(np.float64).sum())
+            / max(served, 1))
+        if n_run:
+            tr = tenreq_t.astype(np.float64).sum(axis=0)
+            req_kw["tenant_request_g"] = np.concatenate([tr[:n_run],
+                                                         tr[-1:]])
     return SimResult(
         emissions_g=float(series.sum()) + mig_cost,
         migration_cost_g=mig_cost,
@@ -1774,7 +1967,7 @@ def _scan_result(run: _ScanRun, carry, ys) -> SimResult:
         safe_epochs=int(run.fplan.safe.sum())
         if run.fplan is not None else 0,
         start_epoch=start_epoch,
-        tenant_emissions_g=tenant_g)
+        tenant_emissions_g=tenant_g, **req_kw)
 
 
 def simulate_fleet_scan(fleet0: Fleet, region_ci: np.ndarray,

@@ -59,10 +59,16 @@ class ServeEngine:
                                        {"tokens": jnp.asarray(prompts)})
         tok = self._sample(logits)
         pos = jnp.full((B,), P, jnp.int32)
-        active = jnp.ones((B,), bool)
+        # honor EOS on the prefill-sampled token too: the token is still
+        # emitted (same convention as in-loop EOS), but its slot goes
+        # inactive immediately instead of burning a decode step first
+        active = (tok != eos_id) if eos_id is not None \
+            else jnp.ones((B,), bool)
         out = [[int(t)] for t in np.asarray(tok)]
 
         for step in range(max_new - 1):
+            if not bool(jnp.any(active)):
+                break
             logits, caches = self._decode(
                 self.params, caches, {"token": tok, "positions": pos})
             nxt = self._sample(logits)

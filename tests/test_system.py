@@ -61,6 +61,31 @@ def test_serve_engine_greedy_is_deterministic():
     assert outs[0] == outs[1]
 
 
+def test_serve_engine_prefill_eos_skips_decode():
+    """EOS sampled at prefill deactivates the slot immediately: the token
+    is still emitted (same convention as in-loop EOS), but an all-EOS
+    batch burns zero decode steps (regression: it used to run one)."""
+    cfg = ARCHS["musicgen-medium"].reduced()
+    model = build_model(cfg, ModelFlags(attn_chunk=32))
+    params = model.init(jax.random.key(2))
+    eng = ServeEngine(model, params, max_seq=32, batch_slots=2)
+    prompts = np.tile(
+        np.random.default_rng(2).integers(2, cfg.vocab, (1, 6)), (2, 1))
+    prompts = prompts.astype(np.int32)
+    eos = eng.generate(prompts, max_new=1)[0].tokens[0]
+
+    calls = {"n": 0}
+    inner = eng._decode
+    eng._decode = lambda *a: calls.update(n=calls["n"] + 1) or inner(*a)
+    results = eng.generate(prompts, max_new=4, eos_id=eos)
+    assert calls["n"] == 0
+    assert [r.tokens for r in results] == [[eos], [eos]]
+    # control: without an EOS match the decode loop still runs in full
+    calls["n"] = 0
+    eng.generate(prompts, max_new=4, eos_id=None)
+    assert calls["n"] == 3
+
+
 def test_maizx_end_to_end_placement_prefers_green_pods():
     """Fleet-level invariant: jobs land on pods whose CI×PUE is below the
     fleet median (the MAIZX promise)."""
