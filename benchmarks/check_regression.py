@@ -27,8 +27,10 @@ Usage (one call per artifact kind):
 
 Gates (exit 1 on any):
 - **parity breaks**: any parity flag false in the current artifact
-  (shortlist-vs-oracle, scan-vs-host) — the bench itself also exits
-  nonzero, this is belt-and-braces for stale artifacts;
+  (shortlist-vs-oracle, scan-vs-host, and the ``--kind placement``
+  kernel block's batched-Pallas-ensemble vs per-lane scan driver) — the
+  bench itself also exits nonzero, this is belt-and-braces for stale
+  artifacts;
 - **sweeps/job regressions**: current rank-sweep economy worse than the
   baseline by more than 5 % (the engines are deterministic, so any growth
   means the shortlist/bound machinery got weaker);
@@ -181,6 +183,19 @@ def check_placement(base: dict, cur: dict, t: Table, tol: float) -> None:
         t.check_ratio(f"{tag} auto us/call",
                       b.get("auto", {}).get("us_per_call"),
                       c.get("auto", {}).get("us_per_call"), tol)
+    # kernel-batched ensemble leg (PR 10): per-lane bit-parity of the ONE
+    # (stalled-lanes x node-tiles) Pallas launch vs the per-lane scan
+    # driver is a hard machine-independent gate (interpret mode on CPU);
+    # the sweep economy must not regress vs the committed baseline.
+    # Old baselines without a "kernel" block skip via check_flag(None).
+    k_b = base.get("kernel") or {}
+    k_c = cur.get("kernel") or {}
+    ktag = f"kernel n={k_c.get('n')}/e={k_c.get('lanes')}"
+    t.check_flag(f"{ktag} ensemble parity", k_c.get("parity"))
+    t.check_ratio(f"{ktag} sweeps/job", k_b.get("sweeps_per_job"),
+                  k_c.get("sweeps_per_job"), SWEEP_TOL)
+    t.check_ratio(f"{ktag} ensemble s", k_b.get("ensemble_s"),
+                  k_c.get("ensemble_s"), tol)
 
 
 def check_sim(base: dict, cur: dict, t: Table, tol: float) -> None:

@@ -231,9 +231,64 @@ def bench_placement_scale():
             raise SystemExit(
                 f"placement parity broken at n={n}: auto != shortlist")
         artifact.append(entry)
-    write_artifact("BENCH_placement.json", {"configs": artifact},
+    kernel = _bench_placement_kernel(
+        int(os.environ.get("KERNEL_NS", "2048")),
+        int(os.environ.get("KERNEL_E", "4")))
+    write_artifact("BENCH_placement.json",
+                   {"configs": artifact, "kernel": kernel},
                    {"ns": list(ns), "jobs": J, "demand_chips": d,
-                    "shortlist": K})
+                    "shortlist": K, "kernel_n": kernel["n"],
+                    "kernel_lanes": kernel["lanes"]})
+
+
+def _bench_placement_kernel(n: int, lanes: int) -> dict:
+    """Kernel-batched ensemble leg: ``use_kernel=True`` lanes through
+    ``simulate_fleet_ensemble`` (ONE (stalled-lanes x node-tiles) Pallas
+    launch per placement round) vs the per-lane scan driver running the
+    sequential kernel.  Gates bit-parity of placements + sweep counts —
+    on CPU both legs run the kernel in interpret mode, so this is the
+    machine-independent contract CI checks; sizes via KERNEL_NS/KERNEL_E.
+    Exits nonzero on a parity break (mirrors the engine legs)."""
+    import dataclasses
+    from repro.core.simulator import (SimConfig, generate_jobs,
+                                      simulate_fleet_ensemble,
+                                      simulate_fleet_scan,
+                                      synthetic_lifecycle_fleet)
+    cfg0 = SimConfig(epochs=12, arrival_rate=6.0, mean_duration_h=6.0,
+                     shortlist=16, history_h=48, horizon_h=8,
+                     use_kernel=True)
+    runs = []
+    for s in range(lanes):
+        cfg = dataclasses.replace(cfg0, seed=s)
+        fleet, traces, ridx = synthetic_lifecycle_fleet(
+            n, cfg, chips_per_node=64)
+        runs.append((fleet, traces, ridx, cfg, generate_jobs(cfg)))
+    t0 = time.perf_counter()
+    ens = simulate_fleet_ensemble(runs)
+    ens_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    seq = [simulate_fleet_scan(f, t, r, c, jobs=j, pad_plan=True)
+           for f, t, r, c, j in runs]
+    seq_s = time.perf_counter() - t0
+    parity = all(
+        np.array_equal(a.node_log, b.node_log)
+        and np.array_equal(a.first_node, b.first_node)
+        and a.rank_sweeps == b.rank_sweeps
+        for a, b in zip(seq, ens))
+    jobs = sum(len(r.node_log) for r in ens)
+    sweeps = sum(r.rank_sweeps for r in ens)
+    interpret = jax.default_backend() != "tpu"
+    row(f"placement_kernel_ens_n{n}_e{lanes}", ens_s / lanes * 1e6,
+        f"sweeps={sweeps};parity={parity};interpret={interpret}")
+    if not parity:
+        raise SystemExit(
+            f"placement parity broken at n={n}: kernel ensemble lanes != "
+            f"per-lane scan driver (use_kernel=True)")
+    return {"n": n, "lanes": lanes, "epochs": cfg0.epochs,
+            "interpret": interpret, "parity": bool(parity),
+            "rank_sweeps": int(sweeps), "jobs": int(jobs),
+            "sweeps_per_job": float(sweeps / max(jobs, 1)),
+            "ensemble_s": ens_s, "scan_s": seq_s}
 
 
 def _scan_vs_host_parity(host, scan):

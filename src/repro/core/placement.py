@@ -207,13 +207,19 @@ def frozen_ctx(fleet: Fleet, weights: RankWeights = RankWeights(),
         # the horizon) for powered-off ones.  Normalizer frozen at entry
         # like every other term.  The term is always evaluated when these
         # entries exist; with traced ``w_m == 0`` it adds exactly +0.0.
+        # ``lohi`` grows its fifth row so the generalized Pallas sweep
+        # normalizes the in-kernel marginal term with the same frozen pair.
         ct_f = fleet.chips_total.astype(jnp.float32)
+        emb_h = em.embodied_g_per_node_h * horizon_h
         m_dyn = a_now * inv_total * dyn_f
-        m_wake = a_now * idle_f + em.embodied_g_per_node_h * horizon_h
+        m_wake = a_now * idle_f + emb_h
         mcfp0 = m_dyn + jnp.where(cap0 == ct_f, m_wake, 0.0)
-        lo_m, rcp_m, _ = _lo_rcp(mcfp0)
+        lo_m, rcp_m, hi_m = _lo_rcp(mcfp0)
         ctx.update(m_dyn=m_dyn, m_wake=m_wake, ct_f=ct_f,
+                   emb_h=jnp.asarray(emb_h, jnp.float32),
                    lo_m=lo_m, rcp_m=rcp_m,
+                   lohi=jnp.concatenate(
+                       [lohi, jnp.stack([lo_m, hi_m])[None]]),
                    w_m=jnp.asarray(em.w_marginal, jnp.float32))
     return ctx
 
@@ -369,8 +375,11 @@ def place_lifecycle_shortlist(fleet: Fleet, demands: jax.Array,
     epoch shortlist size; ``use_kernel`` routes the epoch sweeps through
     the fused Pallas two-sweep kernel
     (``repro.kernels.ops.maiz_ranking_topk``) — the TPU fleet-scale path.
-    Kernel scores agree with the jnp path to float32 tolerance (not bitwise;
-    exact-parity guarantees are for the default jnp scoring).
+    Custom ``energy`` models and ``weights.marginal`` are threaded into the
+    kernel (the ``ec`` stream plus the en_* scalar block; see
+    ``kernels.maizx_rank``).  Kernel scores agree with the jnp path to
+    float32 tolerance (not bitwise; exact-parity guarantees are for the
+    default jnp scoring).
 
     The engine starts *dirty* (no shortlist yet): leading releases are pure
     O(1) capacity edits and the first arrival performs the epoch's lazy
@@ -405,14 +414,6 @@ def place_lifecycle_shortlist(fleet: Fleet, demands: jax.Array,
     K = min(max(shortlist, 1), N)
     full_cover = K >= N          # shortlist == whole fleet: bound unused
     INF = jnp.float32(jnp.inf)
-    if use_kernel and (energy is not None or weights.marginal):
-        # The Pallas sweep scores exactly the four historical Eq. 1 terms;
-        # it has no marginal-CFP term and reads the module constants, so a
-        # non-default energy model silently diverging is worse than a hard
-        # error here (callers route marginal runs to the jnp path).
-        raise NotImplementedError(
-            "use_kernel=True does not support a custom EnergyModel or "
-            "weights.marginal != 0; use the jnp scoring path")
     ctx = frozen_ctx(fleet, weights, horizon_h, energy=energy)
     cap0 = fleet.capacity if capacity is None else capacity
     # health is a HARD feasibility constraint (an outaged node is not a
@@ -430,12 +431,28 @@ def place_lifecycle_shortlist(fleet: Fleet, demands: jax.Array,
     if use_kernel:
         from repro.kernels.ops import maiz_ranking_topk
 
+        # custom idle/dynamic watts reach the kernel through the ``ec``
+        # stream; the marginal-CFP term (when frozen_ctx materialized it)
+        # through the pk/cap/ct node streams + the (1, 4) en scalar block
+        em_k = energy
+        if em_k is None and weights.marginal:
+            em_k = DEFAULT_ENERGY.device(w_marginal=weights.marginal)
+        if em_k is None:
+            mkw = {}
+        else:
+            mkw = dict(pk=fleet.power_kw * horizon_h,
+                       chips_total=ctx["ct_f"],
+                       en=jnp.stack([jnp.asarray(ctx["idle_f"], jnp.float32),
+                                     jnp.asarray(ctx["dyn_f"], jnp.float32),
+                                     ctx["emb_h"], ctx["w_m"]]))
+
         def sweep_topk(cap):
-            energy = fleet.effective_power_kw(cap) * horizon_h
+            ec = fleet.effective_power_kw(cap, energy=em_k) * horizon_h
+            kw = dict(mkw, cap=cap.astype(jnp.float32)) if mkw else {}
             return maiz_ranking_topk(
-                energy, fleet.pue, fleet.ci_now, fleet.ci_forecast,
+                ec, fleet.pue, fleet.ci_now, fleet.ci_forecast,
                 fleet.flops_per_j, fleet.sched_term, weights.as_array(),
-                k=k_cand, lohi=ctx["lohi"], interpret=interpret)
+                k=k_cand, lohi=ctx["lohi"], interpret=interpret, **kw)
     else:
         def sweep_topk(cap):
             scores = _ctx_scores(cap, ctx, weights)
@@ -589,6 +606,8 @@ def place_lifecycle_batched(fleet: Fleet, demands: jax.Array,
                             weights: RankWeights = RankWeights(),
                             horizon_h: float = 1.0, *,
                             engine: str = "shortlist", shortlist: int = 32,
+                            use_kernel: bool = False,
+                            interpret: Optional[bool] = None,
                             capacity: Optional[jax.Array] = None,
                             n_events: Optional[jax.Array] = None,
                             energy: Optional[EnergyModel] = None):
@@ -623,8 +642,10 @@ def place_lifecycle_batched(fleet: Fleet, demands: jax.Array,
     whole ensemble, and the per-event ops amortize their dispatch
     overhead across lanes — the enabling structure for
     ``simulator.simulate_fleet_ensemble``.  The shortlist top-k merge is
-    the batched ``lax.top_k`` (jnp scoring path; the Pallas kernel sweep
-    stays sequential-only)."""
+    the batched ``lax.top_k``; with ``use_kernel`` the round-boundary
+    sweep is instead ONE Pallas launch on a (stalled-lanes × node-tiles)
+    grid (``repro.kernels.ops.maiz_ranking_topk_batched``), per-lane
+    identical to the sequential engine's kernel sweep."""
     L, N = fleet.capacity.shape
     E = demands.shape[1]
     K = min(max(shortlist, 1), N)
@@ -676,10 +697,40 @@ def place_lifecycle_batched(fleet: Fleet, demands: jax.Array,
              jnp.zeros((L,), jnp.int32)))
         return out, cap, sweeps
 
-    def sweep_topk(cap):
-        scores = _ctx_scores(cap, ctx, weights)
-        neg, idx = jax.lax.top_k(-scores, k_cand)
-        return scores, -neg, idx.astype(jnp.int32)
+    if use_kernel:
+        from repro.kernels.ops import maiz_ranking_topk_batched
+
+        # the same stream threading as the sequential engine, one lane
+        # axis wider: ec via (vmapped) effective power, the marginal term
+        # via pk/cap/ct + the per-lane (L, 4) en block from the vmapped ctx
+        if energy is None:
+            eff_pw = fleet.effective_power_kw
+        else:
+            def eff_pw(cap):
+                return jax.vmap(
+                    lambda f, c, e: f.effective_power_kw(c, energy=e)
+                )(fleet, cap, energy)
+        if "m_dyn" in ctx:
+            mkw = dict(pk=fleet.power_kw * horizon_h,
+                       chips_total=ctx["ct_f"],
+                       en=jnp.concatenate(
+                           [ctx["idle_f"], ctx["dyn_f"],
+                            ctx["emb_h"], ctx["w_m"]], axis=1))
+        else:
+            mkw = {}
+
+        def sweep_topk(cap):
+            ec = eff_pw(cap) * horizon_h
+            kw = dict(mkw, cap=cap.astype(jnp.float32)) if mkw else {}
+            return maiz_ranking_topk_batched(
+                ec, fleet.pue, fleet.ci_now, fleet.ci_forecast,
+                fleet.flops_per_j, fleet.sched_term, weights.as_array(),
+                k=k_cand, lohi=ctx["lohi"], interpret=interpret, **kw)
+    else:
+        def sweep_topk(cap):
+            scores = _ctx_scores(cap, ctx, weights)
+            neg, idx = jax.lax.top_k(-scores, k_cand)
+            return scores, -neg, idx.astype(jnp.int32)
 
     def split_shortlist(cand_s, cand_i):
         if full_cover:

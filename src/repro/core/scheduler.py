@@ -113,16 +113,20 @@ def _auto_engine(n: int, j: int, use_kernel: bool = False) -> str:
 
     The fused shortlist engine's win is measured in rank sweeps — the
     memory-bound currency on accelerators — so it stays the choice for
-    the Pallas kernel path and any non-CPU backend.  On the XLA:CPU jnp
-    path, the engine's in-loop ``lax.top_k`` lowers as a full sort under
-    ``lax.cond`` (~50x slower, see ``repro.core.placement``), and the
-    measured grid (BENCH_placement.json: N=4096 engine 112.8 ms vs full
-    5.6 ms/call at J=256; full faster at every point up to N=262144)
-    shows the O(J·N) full re-rank winning everywhere a job list of
-    realistic size is placed — the crossover only arrives when N/J grows
-    past ``_AUTO_FULL_MAX_N_PER_JOB`` and per-job full sweeps become the
-    bandwidth bottleneck."""
-    if use_kernel or jax.default_backend() != "cpu":
+    any non-CPU backend.  On XLA:CPU, the engine's in-loop ``lax.top_k``
+    lowers as a full sort under ``lax.cond`` (~50x slower, see
+    ``repro.core.placement``), and the measured grid
+    (BENCH_placement.json: N=4096 engine 112.8 ms vs full 5.6 ms/call at
+    J=256; full faster at every point up to N=262144) shows the O(J·N)
+    full re-rank winning everywhere a job list of realistic size is
+    placed — the crossover only arrives when N/J grows past
+    ``_AUTO_FULL_MAX_N_PER_JOB`` and per-job full sweeps become the
+    bandwidth bottleneck.  ``use_kernel`` no longer forces the shortlist
+    engine: on CPU the kernel runs in interpret mode, where the same
+    cliff applies, so the N/J crossover decides (the kernel sweep plugs
+    into either engine's epoch pre-pass)."""
+    del use_kernel  # kept for API compat; no longer affects the choice
+    if jax.default_backend() != "cpu":
         return "shortlist"
     return "shortlist" if n // max(j, 1) > _AUTO_FULL_MAX_N_PER_JOB \
         else "full"

@@ -528,17 +528,10 @@ def simulate_fleet(fleet0: Fleet, region_ci: np.ndarray, ridx: np.ndarray,
     # weights enter the compiled graph through their canonical graph_key
     # (marginal pinned to 0): the live marginal weight rides as traced
     # data inside the EnergyModel, so a marginal-weight sweep shares one
-    # compile.  The kernel path scores without the marginal term and with
-    # the module constants — reject combinations it cannot honor.
+    # compile — on the Pallas path too, where the en_* scalars are
+    # threaded into the sweep kernel (see kernels.maizx_rank).
     em_host = cfg.energy
-    if cfg.use_kernel and (cfg.weights.marginal != 0.0
-                           or em_host != DEFAULT_ENERGY):
-        raise NotImplementedError(
-            "use_kernel=True supports only the default EnergyModel with "
-            "weights.marginal == 0 (the Pallas sweep scores the four "
-            "historical Eq. 1 terms with baked-in constants)")
-    em_dev = None if cfg.use_kernel \
-        else em_host.device(w_marginal=cfg.weights.marginal)
+    em_dev = em_host.device(w_marginal=cfg.weights.marginal)
     statics = (cfg.engine, cfg.shortlist, cfg.use_kernel,
                cfg.weights.graph_key(),
                cfg.horizon_h, cfg.history_h,
@@ -1072,8 +1065,8 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
     # the per-run EnergyModel rides through ``arrs`` as traced f32 data
     # (``en_*`` scalars, lowered host-side by ``_build_arrs``) — an
     # (idle-frac x embodied x marginal) calibration grid shares this one
-    # compiled trajectory.  The kernel path keeps its baked constants, so
-    # it scores with energy=None (guarded in ``_prepare_scan_run``).
+    # compiled trajectory, on the Pallas path too (the kernel consumes
+    # the same scalars through its en_* SMEM block).
     use_kernel = statics[2]
     if slo:
         arange_e = jnp.arange(n_narr, dtype=jnp.int32)
@@ -1562,8 +1555,8 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
 
     # traced EnergyModel twin for the placement engines ((L,) leaves in
     # the ensemble — the batched ctx builder vmaps over them); the Pallas
-    # kernel scores with its baked constants, so it gets None
-    em_tr = None if use_kernel else EnergyModel(
+    # sweep consumes the same model via the en_* scalar block
+    em_tr = EnergyModel(
         idle_frac=arrs["en_idle"], chip_power_w=arrs["en_chipw"],
         host_power_w=arrs["en_hostw"],
         embodied_g_per_node_h=arrs["en_embodied"],
@@ -1612,8 +1605,9 @@ def _traj_scan(arrs, statics, dims, ensemble: bool):
                       chips_total=arrs["chips_total"])
         out_c, cap2, n_sw = place_lifecycle_batched(
             fleet, mid["dem"], weights, horizon_h=1.0, engine=engine,
-            shortlist=shortlist, capacity=mid["cap_start"],
-            n_events=mid["n_ev"], energy=em_tr)
+            shortlist=shortlist, use_kernel=use_kernel,
+            capacity=mid["cap_start"], n_events=mid["n_ev"],
+            energy=em_tr)
         return vpost(arrs, mid, out_c, cap2, n_sw)
 
     init = (arrs["capacity"], jnp.zeros((L, N), jnp.int32),
@@ -1674,12 +1668,6 @@ def _prepare_scan_run(fleet0: Fleet, region_ci: np.ndarray,
         raise ValueError(
             f"scanned core supports engine='shortlist'|'full', got "
             f"{cfg.engine!r} (blind/spread comparators are host-only)")
-    if cfg.use_kernel and (cfg.weights.marginal != 0.0
-                           or cfg.energy != DEFAULT_ENERGY):
-        raise NotImplementedError(
-            "the Pallas kernel scores with baked default-energy constants; "
-            "use_kernel=False is required for a custom EnergyModel or a "
-            "nonzero RankWeights.marginal")
     jobs = jobs if jobs is not None else generate_jobs(cfg)
     if cfg.n_tenants and jobs.tenant is None:
         raise ValueError("SimConfig.n_tenants > 0 requires a JobSchedule "
@@ -2009,7 +1997,7 @@ def simulate_fleet_scan(fleet0: Fleet, region_ci: np.ndarray,
 
 
 def simulate_fleet_ensemble(runs, *, pad_plan: bool = True,
-                            shard: bool = False) -> list:
+                            shard=False) -> list:
     """Run an ensemble of trajectories as ONE compiled, ONE dispatched
     batched-``lax.scan`` program per graph bucket.
 
@@ -2039,15 +2027,21 @@ def simulate_fleet_ensemble(runs, *, pad_plan: bool = True,
     ``shard=True`` additionally lays the E axis out across the available
     devices (largest divisor of E <= device count) via ``NamedSharding``,
     so the same compiled program runs data-parallel over the ensemble on
-    multi-device CPU/TPU; on a single device it is a no-op."""
+    multi-device CPU/TPU; on a single device it is a no-op.
+    ``shard="en"`` uses the 2D ``("e", "n")`` mesh instead
+    (``distributed.sharding.ensemble_mesh``): the leftover device factor
+    splits the *node* axis of the (E, N) fleet buffers, for fleets that do
+    not fit one device — the tile-local top-k merge is unchanged (XLA
+    concatenates per-shard candidates before the host-side ``lax.top_k``).
+
+    ``use_kernel=True`` members run the batched Pallas sweep — one
+    (stalled-lanes × node-tiles) kernel launch per placement round
+    (``placement.place_lifecycle_batched``), per-lane bit-identical to
+    the sequential scan driver (interpret mode on CPU, compiled on
+    TPU)."""
     preps = []
     for spec in runs:
         jobs = spec[4] if len(spec) > 4 else None
-        if spec[3].use_kernel:
-            raise NotImplementedError(
-                "simulate_fleet_ensemble batches the jnp scoring path "
-                "only; run simulate_fleet_scan per member for the Pallas "
-                "kernel sweep (use_kernel=True)")
         preps.append(_prepare_scan_run(spec[0], spec[1], spec[2], spec[3],
                                        jobs, pad_plan))
     buckets: Dict[tuple, list] = {}
@@ -2061,7 +2055,8 @@ def simulate_fleet_ensemble(runs, *, pad_plan: bool = True,
         stacked = {k: jnp.stack([b[k] for b in built]) for k in built[0]}
         del built
         if shard:
-            stacked = _shard_over_e(stacked)
+            stacked = _shard_over_e(
+                stacked, axes="en" if shard == "en" else "e")
         with warnings.catch_warnings():
             # input donation is best-effort: only the lanes that alias a
             # scan carry are consumed, the rest warn — expected, not a bug
@@ -2078,20 +2073,43 @@ def simulate_fleet_ensemble(runs, *, pad_plan: bool = True,
     return results
 
 
-def _shard_over_e(stacked):
-    """Lay the leading ensemble axis across devices (largest divisor of E
-    <= the device count); ``jit`` then compiles the vmapped trajectory as
-    an SPMD program partitioned over E — every input is batched on E, so
-    the partition is communication-free."""
+# the stacked buffers that carry the node axis in dim 1 — the only ones a
+# ("e", "n") mesh partitions beyond the ensemble axis
+_NODE_AXIS_KEYS = ("capacity", "pue", "power_kw", "chips_total",
+                   "flops_per_j", "straggler", "healthy", "ridx")
+
+
+def _shard_over_e(stacked, axes: str = "e"):
+    """Lay the stacked ensemble buffers across devices.
+
+    ``axes="e"``: partition the leading ensemble axis only (largest
+    divisor of E <= the device count) — every input is batched on E, so
+    the partition is communication-free.  ``axes="en"``: build the 2D
+    ``("e", "n")`` mesh (``distributed.sharding.ensemble_mesh``) and
+    additionally split the node axis of the (E, N) fleet buffers over the
+    leftover device factor — for fleets that do not fit one device; XLA
+    inserts the cross-shard collectives for the ``lax.top_k`` candidate
+    merge and argmin reductions.  Either way a single device is a no-op."""
     devs = jax.devices()
     E = next(iter(stacked.values())).shape[0]
-    nd = max((d for d in range(1, len(devs) + 1) if E % d == 0),
-             default=1)
-    if nd <= 1:
+    P = jax.sharding.PartitionSpec
+    if axes == "e":
+        nd = max((d for d in range(1, len(devs) + 1) if E % d == 0),
+                 default=1)
+        if nd <= 1:
+            return stacked
+        mesh = jax.sharding.Mesh(np.array(devs[:nd]), ("e",))
+        sh = jax.sharding.NamedSharding(mesh, P("e"))
+        return {k: jax.device_put(v, sh) for k, v in stacked.items()}
+    if axes != "en":
+        raise ValueError(f"shard axes must be 'e' or 'en', got {axes!r}")
+    from repro.distributed.sharding import ensemble_mesh
+    mesh = ensemble_mesh(E, stacked["capacity"].shape[1], devs)
+    if mesh.devices.size <= 1:
         return stacked
-    mesh = jax.sharding.Mesh(np.array(devs[:nd]), ("e",))
-    sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("e"))
-    return {k: jax.device_put(v, sh) for k, v in stacked.items()}
+    return {k: jax.device_put(v, jax.sharding.NamedSharding(
+        mesh, P("e", "n") if k in _NODE_AXIS_KEYS else P("e")))
+        for k, v in stacked.items()}
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,7 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # ---------------------------------------------------------------------------
@@ -129,6 +130,31 @@ def resolve_spec(shape: Sequence[int],
         else:
             out.append(chosen)
     return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Ensemble / fleet mesh
+# ---------------------------------------------------------------------------
+
+
+def ensemble_mesh(n_lanes: int, n_nodes: int,
+                  devices: Optional[Sequence] = None) -> Mesh:
+    """2D ``("e", "n")`` mesh for the fleet-ensemble simulator.
+
+    Factors the device count greedily: ``e`` (the ensemble-lane axis) takes
+    the largest divisor of ``n_lanes`` that fits — lanes are independent
+    trajectories, so every device spent there is communication-free — and
+    ``n`` (the fleet node axis) takes the largest divisor of ``n_nodes``
+    from what is left, splitting the (E, N) node buffers for fleets that
+    do not fit one device.  Degenerates to a 1x1 mesh on a single device
+    (callers treat ``mesh.devices.size <= 1`` as "do not shard")."""
+    if devices is None:
+        devices = jax.devices()
+    nd = len(devices)
+    ne = max((d for d in range(1, nd + 1) if n_lanes % d == 0), default=1)
+    nn = max((d for d in range(1, nd // ne + 1) if n_nodes % d == 0),
+             default=1)
+    return Mesh(np.array(devices[:ne * nn]).reshape(ne, nn), ("e", "n"))
 
 
 # ---------------------------------------------------------------------------

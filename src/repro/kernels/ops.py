@@ -14,7 +14,8 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.selective_scan import selective_scan
 from repro.kernels.maizx_rank import (MAX_TILE_K, TILE, maiz_lohi_pallas,
-                                      maiz_topk_pallas)
+                                      maiz_lohi_pallas_b, maiz_topk_pallas,
+                                      maiz_topk_pallas_b)
 
 
 def _default_interpret() -> bool:
@@ -33,6 +34,10 @@ def flash_attention_op(q, k, v, *, window: int = 0,
 
 def maiz_ranking_topk(ec, pue, ci_now, ci_fc, eff, sched, weights, *,
                       k: int = 16, lohi: Optional[jax.Array] = None,
+                      pk: Optional[jax.Array] = None,
+                      cap: Optional[jax.Array] = None,
+                      chips_total: Optional[jax.Array] = None,
+                      en: Optional[jax.Array] = None,
                       interpret: Optional[bool] = None
                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Fleet-scale fused MAIZ ranking with a merged top-k shortlist.
@@ -40,8 +45,15 @@ def maiz_ranking_topk(ec, pue, ci_now, ci_fc, eff, sched, weights, *,
     Arrays (N,) any float dtype; pads N up to the 1024-node tile internally
     (padded lanes are masked, never shortlisted).  Two memory-bound sweeps:
     a fused term+lo/hi pre-pass and the score+tile-top-k pass; pass ``lohi``
-    (4, 2) to pin the normalizers and skip sweep 1 (the placement engine
+    (R, 2) to pin the normalizers and skip sweep 1 (the placement engine
     freezes them per decision epoch).
+
+    ``pk``/``cap``/``chips_total`` (node streams) + ``en`` ((4,) scalars
+    ``[idle_frac, dyn_frac, embodied·horizon, w_marginal]``) thread the
+    EnergyModel marginal-CFP term into the sweeps as a fifth score term
+    (R = 5); omitted, the historical 4-term score is computed bit-exactly.
+    With a traced ``en[3] == 0`` the fifth term adds ±0.0 — a bitwise
+    no-op (see ``kernels.maizx_rank``).
 
     Returns (scores (N,), topk_scores (k',), topk_nodes (k',)) with
     k' = min(k, N), ordered lexicographically by (score, node index) —
@@ -65,12 +77,16 @@ def maiz_ranking_topk(ec, pue, ci_now, ci_fc, eff, sched, weights, *,
         return jnp.pad(x.astype(jnp.float32), (0, pad))
 
     args = tuple(padded(a) for a in (ec, pue, ci_now, ci_fc, eff, sched))
+    mkw = {}
+    if en is not None:
+        mkw = dict(pk=padded(pk), cap=padded(cap), ct=padded(chips_total),
+                   en=en)
     n_valid = jnp.full((1, 1), n, jnp.int32)
     if lohi is None:
-        lohi = maiz_lohi_pallas(*args, n_valid, interpret=interpret)
+        lohi = maiz_lohi_pallas(*args, n_valid, interpret=interpret, **mkw)
     scores, tmin, targ = maiz_topk_pallas(
         *args, n_valid, lohi, weights.astype(jnp.float32), k=k_tile,
-        interpret=interpret)
+        interpret=interpret, **mkw)
     scores = scores[:n]
     if k_out > k_tile:
         # the tile-local k is capped (unrolled extraction, MAX_TILE_K): a
@@ -83,6 +99,55 @@ def maiz_ranking_topk(ec, pue, ci_now, ci_fc, eff, sched, weights, *,
     # lower-index-first tie rule preserves global (score, node) order.
     neg, pos = jax.lax.top_k(-tmin.reshape(-1), k_out)
     return scores, -neg, targ.reshape(-1)[pos]
+
+
+def maiz_ranking_topk_batched(ec, pue, ci_now, ci_fc, eff, sched, weights, *,
+                              k: int = 16, lohi: Optional[jax.Array] = None,
+                              pk: Optional[jax.Array] = None,
+                              cap: Optional[jax.Array] = None,
+                              chips_total: Optional[jax.Array] = None,
+                              en: Optional[jax.Array] = None,
+                              interpret: Optional[bool] = None
+                              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched ``maiz_ranking_topk`` over a leading ensemble-lane axis.
+
+    Node arrays (L, N), shared ``weights`` (4,), optional per-lane ``lohi``
+    (L, R, 2) and marginal streams (``pk``/``cap``/``chips_total`` (L, N),
+    ``en`` (L, 4)).  ONE (L × node-tiles)-grid kernel launch scores every
+    lane; per-lane tile candidates are merged by one batched ``lax.top_k``.
+    Each lane's (scores, topk_scores, topk_nodes) is identical to the
+    sequential ``maiz_ranking_topk`` on that lane — the round-boundary
+    sweep of ``placement.place_lifecycle_batched`` relies on this for
+    ensemble/scan-driver parity."""
+    if interpret is None:
+        interpret = _default_interpret()
+    L, n = ec.shape
+    k_out = min(k, n)
+    k_tile = min(k_out, MAX_TILE_K)
+    pad = (-n) % TILE
+
+    def padded(x):
+        return jnp.pad(x.astype(jnp.float32), ((0, 0), (0, pad)))
+
+    args = tuple(padded(a) for a in (ec, pue, ci_now, ci_fc, eff, sched))
+    mkw = {}
+    if en is not None:
+        mkw = dict(pk=padded(pk), cap=padded(cap), ct=padded(chips_total),
+                   en=en)
+    n_valid = jnp.full((1, 1), n, jnp.int32)
+    if lohi is None:
+        lohi = maiz_lohi_pallas_b(*args, n_valid, interpret=interpret, **mkw)
+    scores, tmin, targ = maiz_topk_pallas_b(
+        *args, n_valid, lohi, weights.astype(jnp.float32), k=k_tile,
+        interpret=interpret, **mkw)
+    scores = scores[:, :n]
+    if k_out > k_tile:
+        # same oversized-shortlist fallback as the sequential wrapper,
+        # batched along the lane axis (lax.top_k reduces the last dim)
+        neg, pos = jax.lax.top_k(-scores, k_out)
+        return scores, -neg, pos.astype(jnp.int32)
+    neg, pos = jax.lax.top_k(-tmin.reshape(L, -1), k_out)
+    return scores, -neg, jnp.take_along_axis(targ.reshape(L, -1), pos, axis=1)
 
 
 def maiz_ranking_fused(ec, pue, ci_now, ci_fc, eff, sched, weights, *,

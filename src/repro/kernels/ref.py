@@ -28,12 +28,30 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(B, H, S, hd).astype(q.dtype)
 
 
-def maiz_ranking_ref(ec, pue, ci_now, ci_fc, eff, sched, lohi, weights):
+def _marginal_cfp_ref(pk, pue, ci_now, cap, chips_total, en):
+    """Eq. 1 marginal-CFP term, op-for-op the kernel's ``_tile_mcfp`` /
+    ``placement.frozen_ctx``: ``en = [idle_frac, dyn_frac,
+    embodied·horizon, w_marginal]``."""
+    an = pk.astype(jnp.float32) * pue.astype(jnp.float32)
+    an = an * ci_now.astype(jnp.float32)
+    ct = chips_total.astype(jnp.float32)
+    inv = 1.0 / jnp.maximum(ct, 1.0)
+    m_dyn = an * inv * en[1]
+    m_wake = an * en[0] + en[2]
+    return m_dyn + jnp.where(cap.astype(jnp.float32) == ct, m_wake, 0.0)
+
+
+def maiz_ranking_ref(ec, pue, ci_now, ci_fc, eff, sched, lohi, weights, *,
+                     pk=None, cap=None, chips_total=None, en=None):
     """Oracle for the fused ranking kernel: identical math, plain jnp.
-    Returns (scores, global_min, global_argmin)."""
+    ``pk``/``cap``/``chips_total``/``en`` thread the EnergyModel
+    marginal-CFP term as the fifth score row of ``lohi`` (R = 5), mirroring
+    the generalized kernel.  Returns (scores, global_min, global_argmin)."""
     base = ec.astype(jnp.float32) * pue.astype(jnp.float32)
     terms = [base * ci_now, base * ci_fc, eff.astype(jnp.float32),
              sched.astype(jnp.float32)]
+    if en is not None:
+        terms.append(_marginal_cfp_ref(pk, pue, ci_now, cap, chips_total, en))
 
     def norm(x, i):
         lo, hi = lohi[i, 0], lohi[i, 1]
@@ -44,16 +62,25 @@ def maiz_ranking_ref(ec, pue, ci_now, ci_fc, eff, sched, lohi, weights):
     score = (weights[0] * norm(terms[0], 0) + weights[1] * norm(terms[1], 1)
              + weights[2] * (1.0 - norm(terms[2], 2))
              + weights[3] * norm(terms[3], 3))
+    if en is not None:
+        # select-then-add, same discipline as the kernel: w_m == 0 adds
+        # ±0.0, a bitwise no-op on the 4-term score
+        score = score + en[3] * norm(terms[4], 4)
     return score, jnp.min(score), jnp.argmin(score)
 
 
-def term_lohi(ec, pue, ci_now, ci_fc, eff, sched) -> jax.Array:
-    """The cheap O(N) normalization pre-pass shared by kernel and oracle."""
+def term_lohi(ec, pue, ci_now, ci_fc, eff, sched, *,
+              pk=None, cap=None, chips_total=None, en=None) -> jax.Array:
+    """The cheap O(N) normalization pre-pass shared by kernel and oracle;
+    (4, 2), or (5, 2) with the threaded marginal-CFP streams."""
     base = ec.astype(jnp.float32) * pue.astype(jnp.float32)
-    terms = jnp.stack([base * ci_now, base * ci_fc,
-                       eff.astype(jnp.float32), sched.astype(jnp.float32)])
+    terms = [base * ci_now, base * ci_fc,
+             eff.astype(jnp.float32), sched.astype(jnp.float32)]
+    if en is not None:
+        terms.append(_marginal_cfp_ref(pk, pue, ci_now, cap, chips_total, en))
+    terms = jnp.stack(terms)
     return jnp.stack([jnp.min(terms, axis=1), jnp.max(terms, axis=1)],
-                     axis=-1)                      # (4, 2)
+                     axis=-1)                      # (R, 2)
 
 
 def selective_scan_ref(dt, x, b, c, a):

@@ -7,6 +7,7 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.ops import (flash_attention_op, maiz_ranking_fused,
+                               maiz_ranking_topk, maiz_ranking_topk_batched,
                                selective_scan_op)
 
 FLASH_CASES = [
@@ -88,6 +89,108 @@ def test_maiz_ranking_kernel_matches_module_implementation(rng):
         ec, pue, ci, fc, eff, sw, w.as_array(), interpret=True)
     np.testing.assert_allclose(np.asarray(scores_k), np.asarray(scores_mod),
                                atol=1e-5)
+
+
+def _rank_streams(rng, n):
+    """Random f32 node streams for the ranking kernel, incl. the marginal
+    ones: some nodes fully free (cap == chips_total) to hit the wake
+    branch, some partially occupied."""
+    ec = jnp.asarray(rng.random(n) * 100, jnp.float32)
+    pue = jnp.asarray(1 + rng.random(n), jnp.float32)
+    ci = jnp.asarray(rng.random(n) * 500, jnp.float32)
+    fc = jnp.asarray(rng.random(n) * 500, jnp.float32)
+    eff = jnp.asarray(rng.random(n), jnp.float32)
+    sw = jnp.asarray(rng.random(n), jnp.float32)
+    pk = jnp.asarray(rng.random(n) * 8, jnp.float32)
+    ct = jnp.asarray(rng.choice([64.0, 128.0], n), jnp.float32)
+    cap = jnp.where(jnp.asarray(rng.random(n)) < 0.3, ct,
+                    jnp.floor(jnp.asarray(rng.random(n), jnp.float32) * ct))
+    return ec, pue, ci, fc, eff, sw, pk, cap, ct
+
+
+W4 = jnp.asarray([0.35, 0.25, 0.25, 0.15], jnp.float32)
+
+
+@pytest.mark.parametrize("n", [1024, 5000])
+@pytest.mark.parametrize("idle", [0.2, 0.35])
+@pytest.mark.parametrize("emb_h", [0.0, 120.0])
+@pytest.mark.parametrize("w_m", [0.0, 0.3])
+def test_maiz_ranking_kernel_marginal_matches_ref(n, idle, emb_h, w_m, rng):
+    """The en_*-threaded generalized score (EnergyModel idle/dyn fractions,
+    embodied wake price, marginal-CFP weight) matches the jnp oracle across
+    the (idle x embodied x marginal) grid, argmin exact."""
+    ec, pue, ci, fc, eff, sw, pk, cap, ct = _rank_streams(rng, n)
+    en = jnp.asarray([idle, 1.0 - idle, emb_h, w_m], jnp.float32)
+    mkw = dict(pk=pk, cap=cap, chips_total=ct, en=en)
+    scores, top_s, top_i = maiz_ranking_topk(
+        ec, pue, ci, fc, eff, sw, W4, k=8, interpret=True, **mkw)
+    lohi = ref.term_lohi(ec, pue, ci, fc, eff, sw, **mkw)
+    assert lohi.shape == (5, 2)
+    want, want_min, want_arg = ref.maiz_ranking_ref(
+        ec, pue, ci, fc, eff, sw, lohi, W4, **mkw)
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(want),
+                               atol=1e-5)
+    assert int(top_i[0]) == int(want_arg)
+
+
+def test_maiz_ranking_kernel_marginal_weight_zero_is_bitwise_noop(rng):
+    """en[3] == 0 makes the fifth term add ±0.0 — scores and shortlist are
+    BITWISE the historical 4-term kernel's (the property the default-model
+    golden digests lean on)."""
+    ec, pue, ci, fc, eff, sw, pk, cap, ct = _rank_streams(rng, 2048)
+    en0 = jnp.asarray([0.35, 0.65, 120.0, 0.0], jnp.float32)
+    s4, t4, i4 = maiz_ranking_topk(ec, pue, ci, fc, eff, sw, W4, k=16,
+                                   interpret=True)
+    s5, t5, i5 = maiz_ranking_topk(ec, pue, ci, fc, eff, sw, W4, k=16,
+                                   pk=pk, cap=cap, chips_total=ct, en=en0,
+                                   interpret=True)
+    np.testing.assert_array_equal(np.asarray(s4).view(np.int32),
+                                  np.asarray(s5).view(np.int32))
+    np.testing.assert_array_equal(np.asarray(t4).view(np.int32),
+                                  np.asarray(t5).view(np.int32))
+    np.testing.assert_array_equal(np.asarray(i4), np.asarray(i5))
+
+
+@pytest.mark.parametrize("marginal", [False, True])
+def test_maiz_ranking_topk_batched_matches_sequential(marginal, rng):
+    """Every lane of the ONE-launch (L x node-tiles) batched kernel is
+    bitwise the sequential kernel on that lane — the property the
+    ensemble driver's scan parity rests on."""
+    L, n = 3, 2000
+    lanes = [_rank_streams(rng, n) for _ in range(L)]
+    stack = [jnp.stack([lane[i] for lane in lanes]) for i in range(9)]
+    ec, pue, ci, fc, eff, sw, pk, cap, ct = stack
+    en = jnp.asarray([[0.35, 0.65, 50.0, 0.2],
+                      [0.20, 0.80, 0.0, 0.4],
+                      [0.30, 0.70, 120.0, 0.0]], jnp.float32)
+    mkw_b = dict(pk=pk, cap=cap, chips_total=ct, en=en) if marginal else {}
+    sb, tb, ib = maiz_ranking_topk_batched(
+        ec, pue, ci, fc, eff, sw, W4, k=16, interpret=True, **mkw_b)
+    for l in range(L):
+        mkw = dict(pk=pk[l], cap=cap[l], chips_total=ct[l],
+                   en=en[l]) if marginal else {}
+        s, t, i = maiz_ranking_topk(
+            ec[l], pue[l], ci[l], fc[l], eff[l], sw[l], W4, k=16,
+            interpret=True, **mkw)
+        np.testing.assert_array_equal(np.asarray(sb[l]).view(np.int32),
+                                      np.asarray(s).view(np.int32))
+        np.testing.assert_array_equal(np.asarray(tb[l]).view(np.int32),
+                                      np.asarray(t).view(np.int32))
+        np.testing.assert_array_equal(np.asarray(ib[l]), np.asarray(i))
+
+
+def test_maiz_topk_tile_k_limit_is_actionable():
+    """Asking the raw tile kernel for k > MAX_TILE_K names the limit and
+    the knobs (the public wrappers fall back to a host-side merge
+    instead — covered by test_placement's oversized-shortlist case)."""
+    from repro.kernels.maizx_rank import MAX_TILE_K, maiz_topk_pallas
+    n_valid = jnp.full((1, 1), 1024, jnp.int32)
+    args = [jnp.ones(1024, jnp.float32)] * 6
+    lohi = jnp.zeros((4, 2), jnp.float32)
+    with pytest.raises(ValueError, match=r"MAX_TILE_K") as ei:
+        maiz_topk_pallas(*args, n_valid, lohi, W4, k=MAX_TILE_K + 1,
+                         interpret=True)
+    assert "shortlist" in str(ei.value)   # tells the caller which knob
 
 
 SCAN_CASES = [

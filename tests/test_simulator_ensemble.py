@@ -196,6 +196,95 @@ def test_ensemble_shard_over_devices_matches():
 
 
 # ---------------------------------------------------------------------------
+# Pallas kernel lanes in the batched ensemble
+# ---------------------------------------------------------------------------
+
+
+def test_ensemble_kernel_lanes_match_scan_driver_on_mixed_stream():
+    """use_kernel=True members run the batched (stalled-lanes x node-tiles)
+    Pallas sweep — one launch per round — and every lane must stay
+    bit-identical to the per-lane scan driver running the sequential
+    kernel (interpret mode on CPU): same digests, counters, sweep
+    counts on the full mixed arrival/release/migration/deferral/
+    eviction stream."""
+    cfg = dataclasses.replace(MIXED, use_kernel=True, shortlist=16)
+    runs = [_run_spec(dataclasses.replace(cfg, seed=s), n=64)
+            for s in (11, 12)]
+    seq, ens = _both(runs)
+    digests = [hashlib.sha256(np.concatenate(
+        [r.node_log, r.first_node]).tobytes()).hexdigest()[:16]
+        for r in ens]
+    want = [hashlib.sha256(np.concatenate(
+        [r.node_log, r.first_node]).tobytes()).hexdigest()[:16]
+        for r in seq]
+    assert digests == want
+
+
+def test_ensemble_kernel_lanes_thread_custom_energy():
+    """Custom EnergyModel scalars + marginal weight reach the batched
+    kernel's per-lane en blocks: kernel ensemble lanes still match the
+    scan driver, and the marginal weight changes placements."""
+    from repro.core.energy import EnergyModel
+    from repro.core.ranking import RankWeights
+    cfg = dataclasses.replace(
+        BASE, epochs=12, use_kernel=True, shortlist=8,
+        energy=EnergyModel(idle_frac=0.25, embodied_g_per_node_h=90.0),
+        weights=RankWeights(marginal=0.2))
+    runs = [_run_spec(dataclasses.replace(cfg, seed=s), n=48)
+            for s in (3, 4)]
+    seq, ens = _both(runs)
+    plain = simulate_fleet_ensemble(
+        [_run_spec(dataclasses.replace(
+            cfg, seed=3, energy=EnergyModel(),
+            weights=RankWeights()), n=48)])
+    assert not np.array_equal(ens[0].node_log, plain[0].node_log)
+
+
+# ---------------------------------------------------------------------------
+# ("e", "n") node-axis sharding
+# ---------------------------------------------------------------------------
+
+
+def test_ensemble_shard_en_single_device_is_noop():
+    """shard="en" on one device degenerates to the unsharded program —
+    bit-identical results (the mesh helper returns a 1x1 mesh and
+    _shard_over_e leaves the buffers alone)."""
+    runs = [_run_spec(dataclasses.replace(BASE, seed=s)) for s in (1, 2)]
+    plain = simulate_fleet_ensemble(runs)
+    en = simulate_fleet_ensemble(runs, shard="en")
+    _assert_member_parity(plain, en)
+
+
+def test_ensemble_mesh_factors_devices():
+    """ensemble_mesh splits devices ensemble-axis-first (communication-
+    free), node axis takes the leftover factor; both axes stick to exact
+    divisors."""
+    from repro.distributed.sharding import ensemble_mesh
+    devs = jax.devices() * 8          # fake an 8x device list
+    m = ensemble_mesh(4, 1024, devs[:8])
+    assert m.axis_names == ("e", "n")
+    assert dict(zip(m.axis_names, m.devices.shape)) == {"e": 4, "n": 2}
+    # E indivisible by anything > 1 -> everything goes to the node axis
+    m = ensemble_mesh(3, 1024, devs[:4])
+    assert m.devices.shape == (3, 1)
+    m = ensemble_mesh(7, 1024, devs[:4])
+    assert m.devices.shape == (1, 4)
+    # single device: 1x1, callers treat as "don't shard"
+    assert ensemble_mesh(4, 1024, devs[:1]).devices.size == 1
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="node-axis sharding needs >1 device")
+def test_ensemble_shard_en_over_devices_matches():
+    runs = [_run_spec(dataclasses.replace(BASE, seed=s), n=128)
+            for s in (1, 2)]
+    seq = [simulate_fleet_scan(f, t, r, c, jobs=j, pad_plan=True)
+           for f, t, r, c, j in runs]
+    ens = simulate_fleet_ensemble(runs, shard="en")
+    _assert_member_parity(seq, ens)
+
+
+# ---------------------------------------------------------------------------
 # hypothesis: random grids keep per-lane equivalence
 # ---------------------------------------------------------------------------
 
